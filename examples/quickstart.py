@@ -1,0 +1,70 @@
+"""Quickstart: schedule two DL models across heterogeneous processors.
+
+Runs the full Puzzle pipeline in ~30 s on CPU:
+  1. build model graphs (paper zoo) + the paper-calibrated profiler,
+  2. run the GA Static Analyzer,
+  3. compare the Pareto solution against the NPU-Only / Best-Mapping
+     baselines via the XRBench saturation multiplier.
+
+Usage: PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import (
+    AnalyzerConfig,
+    GAConfig,
+    PAPER_COMM_MODEL,
+    Profiler,
+    StaticAnalyzer,
+    TableBackend,
+    build_scenario,
+    decode_solution,
+    mobile_processors,
+)
+from repro.core.profiler import AnalyticMobileBackend
+from repro.zoo import all_cost_graphs, paper_profile_tables
+
+
+def main() -> None:
+    graphs = all_cost_graphs()
+    procs = mobile_processors()
+    profiler = Profiler(TableBackend(
+        processors=procs, tables=paper_profile_tables(),
+        fallback=AnalyticMobileBackend(procs),
+    ))
+    scenario = build_scenario(
+        "quickstart",
+        [["face_det", "selfie_seg", "yolov8n", "fast_scnn", "pose_det",
+          "hand_det"]],
+        graphs,
+    )
+    analyzer = StaticAnalyzer(
+        scenario, procs, profiler, PAPER_COMM_MODEL,
+        AnalyzerConfig(ga=GAConfig(pop_size=20, max_generations=24, seed=0)),
+    )
+    print(f"base period: {analyzer.base_periods[0] * 1000:.2f} ms")
+
+    result = analyzer.run_ga()
+    print(f"GA: {result.generations} generations, {result.evaluations} "
+          f"evaluations, {len(result.pareto)} Pareto solutions")
+
+    best = min(result.pareto, key=lambda s: s.fitness[0])
+    placed = decode_solution(best, scenario.graphs)
+    for net, plist in enumerate(placed):
+        desc = ", ".join(
+            f"sg{p.subgraph.sg_index}->{procs[p.processor].name}"
+            f"/{p.dtype}/{p.backend}" for p in plist
+        )
+        print(f"  {scenario.graphs[net].name:12s}: {desc}")
+
+    pz = analyzer.median_saturation(result.pareto)
+    npu = analyzer.saturation(analyzer.npu_only()).alpha_star
+    bm = analyzer.median_saturation(analyzer.best_mapping(max_evals=100))
+    print(f"\nsaturation multiplier α* (lower = sustains higher load):")
+    print(f"  Puzzle       : {pz}")
+    print(f"  Best Mapping : {bm}")
+    print(f"  NPU Only     : {npu}")
+    print(f"  -> Puzzle sustains {npu / pz:.2f}x the request frequency of "
+          f"NPU Only (paper: 3.7x multi-group avg / 2.0x single)")
+
+
+if __name__ == "__main__":
+    main()

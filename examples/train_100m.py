@@ -1,0 +1,51 @@
+"""End-to-end training driver: ~100M-parameter model, few hundred steps.
+
+Trains a 12-layer/512-dim GQA decoder (≈100M params with the 32k vocab)
+on the synthetic Markov stream; loss should fall from ~ln(V) toward the
+chain entropy. Checkpoints under /tmp and resumes if re-run.
+
+Usage: PYTHONPATH=src python examples/train_100m.py [--steps 300]
+"""
+import argparse
+
+from repro.models.config import ATTN, ModelConfig
+from repro.train import TrainConfig, train
+
+
+def model_100m() -> ModelConfig:
+    return ModelConfig(
+        name="demo-100m",
+        arch_type="dense",
+        num_layers=12,
+        d_model=512,
+        num_heads=8,
+        num_kv_heads=2,
+        d_ff=2048,
+        vocab_size=32_768,
+        layout_pattern=(ATTN,),
+        dtype="float32",
+        source="examples/train_100m.py",
+    ).validate()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+    cfg = model_100m()
+    n = cfg.param_count()
+    print(f"model: {cfg.name}  params={n / 1e6:.1f}M")
+    res = train(cfg, TrainConfig(
+        steps=args.steps, batch_size=args.batch, seq_len=args.seq,
+        lr=1e-3, log_every=25,
+        checkpoint_path="/tmp/repro_train_100m.msgpack", checkpoint_every=100,
+    ))
+    print(f"first loss {res.losses[0]:.3f} -> last {res.losses[-1]:.3f} "
+          f"(floor = chain entropy {res.loss_floor:.3f})")
+    print(f"throughput: {res.tokens_per_s:,.0f} tokens/s on CPU")
+
+
+if __name__ == "__main__":
+    main()

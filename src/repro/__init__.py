@@ -1,0 +1,15 @@
+"""repro: Puzzle (GA-based multi-model scheduling) reproduced at framework
+scale in JAX, plus the assigned-architecture serving/training stack.
+
+Subpackages:
+    core      — the paper's contribution (Static Analyzer, GA, simulator)
+    zoo       — the paper's nine mobile networks + measured profiles
+    models    — dense/MoE/SSM/hybrid/enc-dec/VLM JAX stacks
+    kernels   — Pallas TPU kernels + jnp oracles
+    sharding  — logical-axis sharding rules
+    launch    — production meshes, steps, dry-run, roofline
+    train     — optimizers, data, checkpointing, training loop
+    runtime   — threaded Coordinator/Worker/Engine serving runtime
+    configs   — the ten assigned architectures
+"""
+__version__ = "1.0.0"

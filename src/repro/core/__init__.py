@@ -1,0 +1,53 @@
+"""Puzzle core: the paper's contribution — GA-based multi-model scheduling."""
+from .analyzer import AnalyzerConfig, StaticAnalyzer
+from .baselines import best_mapping_solutions, npu_only_solution
+from .chromosome import (
+    BACKENDS,
+    DTYPES,
+    PlacedSubgraph,
+    Solution,
+    SolutionFactory,
+    decode_solution,
+    subgraph_processor,
+)
+from .comm import (
+    PAPER_COMM_MODEL,
+    TPU_COMM_MODEL,
+    PiecewiseLinearCommModel,
+    microbenchmark_host,
+    quantization_cost,
+)
+from .des import Environment, PriorityStore
+from .ga import GAConfig, GAResult, GeneticScheduler
+from .graph import Edge, Layer, ModelGraph, Subgraph, branching_graph, chain_graph
+from .nsga import crowding_distance, das_dennis, dominates, fast_non_dominated_sort, nsga3_select
+from .processors import Processor, mobile_processors, tpu_lanes
+from .profiler import (
+    AnalyticMobileBackend,
+    JaxExecBackend,
+    LaneRooflineBackend,
+    ProfileDB,
+    Profiler,
+    TableBackend,
+    fragmentation_penalty,
+)
+from .scenarios import (
+    Scenario,
+    base_periods,
+    best_model_times,
+    build_scenario,
+    random_scenarios,
+    whole_model_placement,
+)
+from .scoring import (
+    SaturationResult,
+    group_scores,
+    percentile,
+    qoe_score,
+    rt_score,
+    saturation_multiplier,
+    scenario_score,
+)
+from .simulator import NoiseModel, RequestRecord, RuntimeSimulator, SimResult, TaskRecord
+
+__all__ = [k for k in dir() if not k.startswith("_")]

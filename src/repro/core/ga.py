@@ -1,0 +1,186 @@
+"""Genetic Algorithm driver (paper §4.3, Fig. 8).
+
+Follows the paper's process: all candidates become parents (no elitist
+subset selection), one-point crossover on partition/mapping, UPMX on
+priority, mutation, probabilistic local search (merge-neighbors and
+reposition-adjacent-layers), fast simulator evaluation during search,
+accurate ("brief on-target execution") evaluation before the Pareto
+update, NSGA-III replacement, convergence after ``patience`` generations
+without average-score improvement.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from .chromosome import Solution, SolutionFactory
+from .nsga import fast_non_dominated_sort, nsga3_select
+
+Objective = Tuple[float, ...]
+EvalFn = Callable[[Solution], Objective]
+
+
+@dataclass
+class GAConfig:
+    pop_size: int = 24
+    max_generations: int = 60
+    patience: int = 3            # paper: stop after 3 non-improving generations
+    min_generations: int = 12    # don't let a converged seed stop the search cold
+    cx_prob: float = 0.9
+    p_local: float = 0.5
+    p_bit: float = 0.05
+    p_map: float = 0.08
+    p_prio: float = 0.2
+    p_cfg: float = 0.1
+    seed: int = 0
+
+
+@dataclass
+class GAResult:
+    pareto: List[Solution]
+    history: List[float]           # average population score per generation
+    generations: int
+    evaluations: int
+
+
+def _dominates(a: Objective, b: Objective) -> bool:
+    return all(x <= y for x, y in zip(a, b)) and any(x < y for x, y in zip(a, b))
+
+
+class GeneticScheduler:
+    def __init__(
+        self,
+        factory: SolutionFactory,
+        evaluate_fast: EvalFn,
+        evaluate_accurate: Optional[EvalFn] = None,
+        config: Optional[GAConfig] = None,
+    ):
+        self.factory = factory
+        self.evaluate_fast = evaluate_fast
+        self.evaluate_accurate = evaluate_accurate or evaluate_fast
+        self.cfg = config or GAConfig()
+        self.rng = random.Random(self.cfg.seed)
+        self.evaluations = 0
+        self._cache: Dict[Tuple, Objective] = {}
+
+    # -- evaluation with memoization ------------------------------------------
+    def _eval(self, sol: Solution, accurate: bool = False) -> Objective:
+        key = (sol.key(), accurate)
+        if key in self._cache:
+            return self._cache[key]
+        fn = self.evaluate_accurate if accurate else self.evaluate_fast
+        obj = fn(sol)
+        self.evaluations += 1
+        self._cache[key] = obj
+        return obj
+
+    # -- local search (paper §4.3) ---------------------------------------------
+    def _local_merge(self, sol: Solution) -> Solution:
+        """Merge neighboring subgraphs: clear one cut bit; keep if dominating."""
+        cuts = [
+            (net, i)
+            for net in range(len(sol.partition))
+            for i, b in enumerate(sol.partition[net])
+            if b
+        ]
+        if not cuts:
+            return sol
+        net, i = self.rng.choice(cuts)
+        cand = sol.copy()
+        cand.fitness = None
+        cand.partition[net][i] = 0
+        base = sol.fitness or self._eval(sol)
+        obj = self._eval(cand)
+        if _dominates(obj, base) or obj == base:
+            cand.fitness = obj
+            return cand
+        return sol
+
+    def _local_reposition(self, sol: Solution) -> Solution:
+        """Reposition adjacent layers: pull one layer onto a neighbor's processor."""
+        nets = [n for n in range(len(sol.mapping)) if len(sol.mapping[n]) > 1]
+        if not nets:
+            return sol
+        net = self.rng.choice(nets)
+        i = self.rng.randrange(len(sol.mapping[net]) - 1)
+        cand = sol.copy()
+        cand.fitness = None
+        if self.rng.random() < 0.5:
+            cand.mapping[net][i + 1] = cand.mapping[net][i]
+        else:
+            cand.mapping[net][i] = cand.mapping[net][i + 1]
+        base = sol.fitness or self._eval(sol)
+        obj = self._eval(cand)
+        if _dominates(obj, base):
+            cand.fitness = obj
+            return cand
+        return sol
+
+    # -- main loop ------------------------------------------------------------
+    def run(self, seeds: Sequence[Solution] = ()) -> GAResult:
+        cfg = self.cfg
+        pop: List[Solution] = [s.copy() for s in seeds]
+        while len(pop) < cfg.pop_size:
+            pop.append(self.factory.random_solution())
+        pop = pop[: cfg.pop_size]
+        for s in pop:
+            s.fitness = self._eval(s)
+
+        history: List[float] = []
+        stale = 0
+        best_avg = float("inf")
+        gen = 0
+        for gen in range(1, cfg.max_generations + 1):
+            # All candidates are parents (paper: avoid premature convergence).
+            parents = pop[:]
+            self.rng.shuffle(parents)
+            offspring: List[Solution] = []
+            for a, b in zip(parents[0::2], parents[1::2]):
+                if self.rng.random() < cfg.cx_prob:
+                    c1, c2 = self.factory.crossover(a, b)
+                else:
+                    c1, c2 = a.copy(), b.copy()
+                c1 = self.factory.mutate(c1, cfg.p_bit, cfg.p_map, cfg.p_prio, cfg.p_cfg)
+                c2 = self.factory.mutate(c2, cfg.p_bit, cfg.p_map, cfg.p_prio, cfg.p_cfg)
+                offspring.extend([c1, c2])
+            for k, child in enumerate(offspring):
+                child.fitness = self._eval(child)
+                if self.rng.random() < cfg.p_local:
+                    child = self._local_merge(child)
+                    child = self._local_reposition(child)
+                    offspring[k] = child
+            # Accurate ("brief on-target") evaluation of the candidates that
+            # could enter the Pareto set, before the population update.
+            combined = pop + offspring
+            fits = [list(s.fitness) for s in combined]
+            front0 = fast_non_dominated_sort(fits)[0]
+            for ix in front0:
+                combined[ix].fitness = self._eval(combined[ix], accurate=True)
+            fits = [list(s.fitness) for s in combined]
+            keep = nsga3_select(fits, cfg.pop_size, rng=self.rng)
+            pop = [combined[i] for i in keep]
+
+            avg = sum(sum(s.fitness) for s in pop) / len(pop)
+            history.append(avg)
+            if avg < best_avg - 1e-12:
+                best_avg = avg
+                stale = 0
+            else:
+                stale += 1
+            if stale >= cfg.patience and gen >= cfg.min_generations:
+                break
+
+        fits = [list(s.fitness) for s in pop]
+        pareto_ix = fast_non_dominated_sort(fits)[0]
+        # dedupe identical chromosomes
+        seen = set()
+        pareto: List[Solution] = []
+        for i in pareto_ix:
+            k = pop[i].key()
+            if k not in seen:
+                seen.add(k)
+                pareto.append(pop[i])
+        return GAResult(
+            pareto=pareto, history=history, generations=gen, evaluations=self.evaluations
+        )

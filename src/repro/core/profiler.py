@@ -1,0 +1,228 @@
+"""Device-in-the-loop profiling with a Merkle-keyed database (paper §4.3).
+
+The Profiler answers "how long does this *subgraph* take on this processor
+with this (dtype, backend) configuration" — never by summing per-layer
+times (§2.1.2 non-linearity). Results are cached in a :class:`ProfileDB`
+keyed by the subgraph's Merkle hash mixed with the execution configuration,
+so repeated GA evaluations across generations reuse measurements.
+
+Backends:
+
+* :class:`AnalyticMobileBackend` — calibrated cost model for the paper's
+  Galaxy S23U processors (Tables 2–4 magnitudes). Captures non-linearity:
+  fragmenting a graph loses fusion/parallelism (``fragmentation_ratio``).
+* :class:`TableBackend` — reads the paper's measured model-level times
+  (zoo/profiles.py) and distributes them over subgraphs MAC-proportionally
+  with the fragmentation penalty; the most paper-faithful option.
+* :class:`JaxExecBackend` — genuinely executes the subgraph (jit-compiled
+  JAX on this host's CPU device) and measures wall time: literal
+  device-in-the-loop for the executable zoo models.
+* :class:`LaneRooflineBackend` — TPU-lane serving adaptation: roofline time
+  from FLOPs/bytes vs lane capacity.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Protocol, Sequence, Tuple
+
+from .chromosome import PlacedSubgraph
+from .graph import Subgraph
+from .processors import Processor
+
+
+class ProfileDB:
+    """Merkle-hash keyed measurement store with optional JSON persistence."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self._data: Dict[str, float] = {}
+        self.hits = 0
+        self.misses = 0
+        if path and os.path.exists(path):
+            with open(path) as f:
+                self._data = json.load(f)
+
+    def get(self, key: str) -> Optional[float]:
+        v = self._data.get(key)
+        if v is not None:
+            self.hits += 1
+        return v
+
+    def put(self, key: str, value: float) -> None:
+        self.misses += 1
+        self._data[key] = value
+
+    def save(self) -> None:
+        if self.path:
+            with open(self.path, "w") as f:
+                json.dump(self._data, f)
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+
+class ProfilerBackend(Protocol):
+    def measure(self, placed: PlacedSubgraph) -> float: ...
+
+
+def fragmentation_penalty(proc: Processor, sg: Subgraph) -> float:
+    """Per-MAC slowdown of a fragment vs the fully fused graph.
+
+    Interpolates geometrically between 1.0 (whole graph as one subgraph) and
+    ``proc.fragmentation_ratio`` (single-layer subgraph), mirroring the
+    Σ(layers)/measured ratios of Table 4.
+    """
+    total = sg.graph.num_layers
+    k = len(sg.layer_ids)
+    if total <= 1 or k >= total:
+        return 1.0
+    frac = (total - k) / (total - 1)  # 0 = whole graph, 1 = single layer
+    return proc.fragmentation_ratio ** frac
+
+
+@dataclass
+class AnalyticMobileBackend:
+    """Closed-form mobile cost model calibrated against the paper's tables."""
+
+    processors: Sequence[Processor]
+
+    def measure(self, placed: PlacedSubgraph) -> float:
+        proc = self.processors[placed.processor]
+        thr = proc.thr(placed.dtype, placed.backend)
+        penalty = 1.0
+        if thr is None:
+            # Unsupported config: fall back to the slowest supported one
+            # with a large penalty (the NNAPI rows of Table 2).
+            supported = [v for _, v in proc.throughput]
+            thr = min(supported) if supported else 1e9
+            penalty = proc.fallback_penalty
+        sg = placed.subgraph
+        compute = sg.macs / thr * fragmentation_penalty(proc, sg) * penalty
+        # memory-bound floor: streaming weights once
+        mem = sg.param_bytes / 40e9
+        return proc.invocation_overhead + proc.layer_overhead * len(sg.layer_ids) + max(
+            compute, mem
+        )
+
+
+@dataclass
+class TableBackend:
+    """Distributes the paper's measured model-level times over subgraphs.
+
+    ``tables[model_name][(proc_kind, dtype, backend)] = seconds`` for the
+    whole model; a subgraph gets its MAC-share with the fragmentation
+    penalty, plus the processor invocation overhead. Missing configurations
+    fall back to the analytic backend.
+    """
+
+    processors: Sequence[Processor]
+    tables: Dict[str, Dict[Tuple[str, str, str], float]]
+    fallback: Optional[ProfilerBackend] = None
+
+    def measure(self, placed: PlacedSubgraph) -> float:
+        proc = self.processors[placed.processor]
+        sg = placed.subgraph
+        table = self.tables.get(sg.graph.name, {})
+        t_model = table.get((proc.kind, placed.dtype, placed.backend))
+        if t_model is None:
+            if self.fallback is None:
+                raise KeyError(
+                    f"no profile for {sg.graph.name} on {proc.kind}/{placed.dtype}/{placed.backend}"
+                )
+            return self.fallback.measure(placed)
+        share = sg.macs / max(sg.graph.total_macs, 1.0)
+        return (
+            proc.invocation_overhead
+            + t_model * share * fragmentation_penalty(proc, sg)
+        )
+
+
+@dataclass
+class JaxExecBackend:
+    """Executes the subgraph for real (jit on the host CPU) and times it.
+
+    ``executables[model_name]`` must provide ``build_subgraph_fn(layer_ids,
+    dtype) -> (fn, example_inputs)``; the zoo models implement this. Each
+    measurement compiles once, then takes the median of ``repeats`` timed
+    runs — the paper's brief on-device execution.
+    """
+
+    executables: Dict[str, Any]
+    repeats: int = 5
+    # hardware heterogeneity emulation on a single-CPU host: relative speed
+    # multipliers per processor id (documented in DESIGN.md §2).
+    speed_scale: Optional[Dict[int, float]] = None
+
+    def measure(self, placed: PlacedSubgraph) -> float:
+        model = self.executables[placed.subgraph.graph.name]
+        fn, args = model.build_subgraph_fn(placed.subgraph.layer_ids, placed.dtype)
+        import jax
+
+        jfn = jax.jit(fn)
+        out = jfn(*args)
+        jax.block_until_ready(out)
+        times = []
+        for _ in range(self.repeats):
+            t0 = time.perf_counter()
+            out = jfn(*args)
+            jax.block_until_ready(out)
+            times.append(time.perf_counter() - t0)
+        t = sorted(times)[len(times) // 2]
+        if self.speed_scale:
+            t *= self.speed_scale.get(placed.processor, 1.0)
+        return t
+
+
+@dataclass
+class LaneRooflineBackend:
+    """TPU-lane serving cost: max(compute, memory) roofline + overheads.
+
+    Efficiency falls with lane size for small subgraphs (the per-chip work
+    shrinks below the MXU-utilization knee), which is exactly why the
+    biggest lane is not optimal for every model — the paper's Table 3
+    observation transplanted to TPU.
+    """
+
+    lanes: Sequence[Processor]
+    dtype_bytes: Tuple[Tuple[str, float], ...] = (("fp32", 4.0), ("fp16", 2.0), ("int8", 1.0))
+    min_work_per_chip: float = 2e8  # FLOPs per chip below which efficiency decays
+
+    def measure(self, placed: PlacedSubgraph) -> float:
+        lane = self.lanes[placed.processor]
+        sg = placed.subgraph
+        flops = 2.0 * sg.macs
+        dbytes = dict(self.dtype_bytes)[placed.dtype]
+        weight_bytes = sg.param_bytes * (dbytes / 4.0)
+        # efficiency: perfect when each chip has >= min_work, else linear decay
+        per_chip = flops / max(lane.chips, 1)
+        eff = min(1.0, per_chip / self.min_work_per_chip) * 0.55 + 0.05
+        speed = {"fp16": 1.0, "fp32": 0.5, "int8": 2.0}[placed.dtype]
+        t_compute = flops / (lane.peak_flops * eff * speed)
+        t_memory = weight_bytes / lane.hbm_bw
+        return lane.invocation_overhead + max(t_compute, t_memory)
+
+
+class Profiler:
+    """Front end: Merkle-cache + backend dispatch (Fig. 4 'Profiler')."""
+
+    def __init__(self, backend: ProfilerBackend, db: Optional[ProfileDB] = None):
+        self.backend = backend
+        # NB: `db or ProfileDB()` would discard an *empty* ProfileDB
+        # (len == 0 is falsy) — compare to None explicitly.
+        self.db = db if db is not None else ProfileDB()
+
+    def subgraph_time(self, placed: PlacedSubgraph) -> float:
+        key = placed.profile_key()
+        cached = self.db.get(key)
+        if cached is not None:
+            return cached
+        t = self.backend.measure(placed)
+        self.db.put(key, t)
+        return t
+
+    def model_time(self, placed_list: Sequence[PlacedSubgraph]) -> float:
+        return sum(self.subgraph_time(p) for p in placed_list)

@@ -1,0 +1,131 @@
+"""Scenario construction: model groups, periods, random scenario generation
+(paper §6.1, Fig. 11).
+
+A *model group* is a set of models triggered together by one input source
+(camera, microphone) at a fixed period. The base period of a group is
+
+    φ̄_G = Σ_{m∈G} min_p τ_p(m) · N · (1 + ε)
+
+with N the number of groups and ε = 0.1; the evaluated period is
+Φ = α · φ̄_G for a period multiplier α.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .chromosome import BACKENDS, DTYPES, PlacedSubgraph, Solution
+from .graph import ModelGraph
+from .processors import Processor
+from .profiler import Profiler
+
+EPSILON = 0.1
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """A workload: model graphs partitioned into synchronized groups."""
+
+    name: str
+    graphs: Tuple[ModelGraph, ...]
+    groups: Tuple[Tuple[int, ...], ...]   # per group: indices into graphs
+
+    @property
+    def num_groups(self) -> int:
+        return len(self.groups)
+
+
+def whole_model_placement(
+    graph: ModelGraph, net: int, processor: int, dtype_ix: int, backend_ix: int
+) -> PlacedSubgraph:
+    """The model as a single un-partitioned subgraph on one processor."""
+    sg = graph.partition([0] * graph.num_edges)[0]
+    return PlacedSubgraph(
+        subgraph=sg, network=net, processor=processor,
+        dtype=DTYPES[dtype_ix], backend=BACKENDS[backend_ix], priority=net,
+    )
+
+
+def best_model_times(
+    graphs: Sequence[ModelGraph],
+    processors: Sequence[Processor],
+    profiler: Profiler,
+) -> List[Dict[int, Tuple[float, int, int]]]:
+    """For each network and processor: (best time, dtype_ix, backend_ix).
+
+    This is the paper's per-model profiling step used both for base periods
+    (min over processors) and by the Best Mapping baseline.
+    """
+    out: List[Dict[int, Tuple[float, int, int]]] = []
+    for net, g in enumerate(graphs):
+        per_proc: Dict[int, Tuple[float, int, int]] = {}
+        for proc in processors:
+            best: Optional[Tuple[float, int, int]] = None
+            for di in range(len(DTYPES)):
+                for bi in range(len(BACKENDS)):
+                    t = profiler.subgraph_time(
+                        whole_model_placement(g, net, proc.pid, di, bi)
+                    )
+                    if best is None or t < best[0]:
+                        best = (t, di, bi)
+            assert best is not None
+            per_proc[proc.pid] = best
+        out.append(per_proc)
+    return out
+
+
+def base_periods(
+    scenario: Scenario,
+    best_times: Sequence[Dict[int, Tuple[float, int, int]]],
+    epsilon: float = EPSILON,
+) -> List[float]:
+    """φ̄ per group (paper §6.1)."""
+    n = scenario.num_groups
+    periods = []
+    for group in scenario.groups:
+        s = sum(min(t for t, _, _ in best_times[m].values()) for m in group)
+        periods.append(s * n * (1 + epsilon))
+    return periods
+
+
+def random_scenarios(
+    model_names: Sequence[str],
+    count: int = 10,
+    models_per_scenario: int = 6,
+    num_groups: int = 1,
+    seed: int = 2025,
+) -> List[List[Tuple[str, ...]]]:
+    """Random scenario compositions as lists of per-group model-name tuples.
+
+    Single model group: ``num_groups=1`` with 6 models (paper §6.1).
+    Multiple groups: ``num_groups=2`` with 3 models each.
+    """
+    rng = random.Random(seed)
+    per_group = models_per_scenario // num_groups
+    out: List[List[Tuple[str, ...]]] = []
+    for _ in range(count):
+        chosen = rng.sample(list(model_names), models_per_scenario)
+        groups = [
+            tuple(chosen[g * per_group : (g + 1) * per_group])
+            for g in range(num_groups)
+        ]
+        out.append(groups)
+    return out
+
+
+def build_scenario(
+    name: str,
+    group_model_names: Sequence[Sequence[str]],
+    graph_factory: Dict[str, ModelGraph],
+) -> Scenario:
+    """Materialize a scenario from model names; duplicates get unique graphs."""
+    graphs: List[ModelGraph] = []
+    groups: List[Tuple[int, ...]] = []
+    for gnames in group_model_names:
+        ids = []
+        for n in gnames:
+            ids.append(len(graphs))
+            graphs.append(graph_factory[n])
+        groups.append(tuple(ids))
+    return Scenario(name=name, graphs=tuple(graphs), groups=tuple(groups))

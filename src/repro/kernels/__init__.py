@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the compute hot-spots + pure-jnp oracles.
+
+The paper's contribution is a scheduling system, not a kernel — but its
+configuration space includes per-subgraph *backend implementation* and
+*data type* choices (Table 1's BE/T axes). These kernels are the TPU
+backends that space selects between: fused flash attention and the SSD
+chunk scan as the `pallas` backend vs plain XLA, and int8 row
+quantization as the Worker's dtype-boundary fast path.
+"""
+from .flash_attention import flash_attention
+from .int8_quant import dequantize_int8, quantize_int8
+from .ops import dequantize_rows, flash_attention_bshd, quantize_rows, ssd_bshp
+from .ref import attention_ref, quantize_ref, ssd_ref
+from .ssd_scan import ssd_scan
+
+__all__ = [k for k in dir() if not k.startswith("_")]

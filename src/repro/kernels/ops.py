@@ -1,0 +1,84 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On this CPU container the kernels run in ``interpret=True`` mode (the
+kernel body executes in Python for correctness validation); on a real TPU
+the same calls lower to Mosaic. ``use_interpret()`` auto-detects.
+
+These wrappers adapt model-layer layouts, e.g. (B, S, H, hd) GQA attention
+→ the kernels' flattened (B·H, S, hd) layout, and broadcast SSD groups to
+heads.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention
+from .int8_quant import dequantize_int8, quantize_int8
+from .ssd_scan import ssd_scan
+
+
+def use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_offset"))
+def flash_attention_bshd(
+    q: jnp.ndarray,                  # (B, Sq, H, hd)
+    k: jnp.ndarray,                  # (B, Sk, Kv, hd)
+    v: jnp.ndarray,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Model-layer entry point: GQA flash attention on (B, S, H, hd)."""
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kv, k.shape[1], hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kv, v.shape[1], hd)
+    out = flash_attention(
+        qf, kf, vf, q_heads_per_kv=g, causal=causal, window=window,
+        q_offset=q_offset, interpret=use_interpret(),
+    )
+    return out.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_bshp(
+    x: jnp.ndarray,                  # (B, S, H, P)
+    dt: jnp.ndarray,                 # (B, S, H)
+    A: jnp.ndarray,                  # (H,)
+    Bm: jnp.ndarray,                 # (B, S, G, N)
+    Cm: jnp.ndarray,                 # (B, S, G, N)
+    chunk: int = 128,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Model-layer entry point: Mamba2 SSD on (B, S, H, P) + groups."""
+    b, s, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    reps = h // g
+    Bh = jnp.repeat(Bm, reps, axis=2)
+    Ch = jnp.repeat(Cm, reps, axis=2)
+    xf = x.transpose(0, 2, 1, 3).reshape(b * h, s, p)
+    dtf = dt.transpose(0, 2, 1).reshape(b * h, s)
+    Bf = Bh.transpose(0, 2, 1, 3).reshape(b * h, s, n)
+    Cf = Ch.transpose(0, 2, 1, 3).reshape(b * h, s, n)
+    Af = jnp.tile(A, b)
+    y, state = ssd_scan(xf, dtf, Af, Bf, Cf, chunk=chunk,
+                        interpret=use_interpret())
+    y = y.reshape(b, h, s, p).transpose(0, 2, 1, 3)
+    state = state.reshape(b, h, n, p).transpose(0, 1, 3, 2)   # (B, H, P, N)
+    return y, state
+
+
+@jax.jit
+def quantize_rows(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    return quantize_int8(x, interpret=use_interpret())
+
+
+def dequantize_rows(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return dequantize_int8(q, scale)

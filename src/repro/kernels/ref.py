@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,                  # (BH, Sq, hd)
+    k: jnp.ndarray,                  # (BKv, Sk, hd)
+    v: jnp.ndarray,
+    *,
+    q_heads_per_kv: int = 1,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    kk = jnp.repeat(k, q_heads_per_kv, axis=0)
+    vv = jnp.repeat(v, q_heads_per_kv, axis=0)
+    hd = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * hd ** -0.5
+    qpos = q_offset + jnp.arange(q.shape[1])[:, None]
+    kpos = jnp.arange(kk.shape[1])[None, :]
+    mask = jnp.ones_like(s[0], dtype=bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, vv.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_ref(
+    x: jnp.ndarray,                  # (BH, S, P)
+    dt: jnp.ndarray,                 # (BH, S)
+    A: jnp.ndarray,                  # (BH,)
+    Bm: jnp.ndarray,                 # (BH, S, N)
+    Cm: jnp.ndarray,                 # (BH, S, N)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Token-by-token linear recurrence — the SSD ground truth.
+
+    state (BH, N, P); y_t = C_t · h_t, h_t = exp(dt_t A) h_{t-1} + dt_t B_t xᵀ_t.
+    """
+    bh, s, p = x.shape
+    n = Bm.shape[-1]
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp        # (BH,P) (BH,) (BH,N) (BH,N)
+        decay = jnp.exp(dtt * A)[:, None, None]
+        outer = jnp.einsum("bn,bp,b->bnp", bt, xt, dtt)
+        new = decay * state + outer
+        y = jnp.einsum("bn,bnp->bp", ct, new)
+        return new, y
+
+    init = jnp.zeros((bh, n, p), jnp.float32)
+    xs = (x.swapaxes(0, 1).astype(jnp.float32), dt.swapaxes(0, 1),
+          Bm.swapaxes(0, 1).astype(jnp.float32),
+          Cm.swapaxes(0, 1).astype(jnp.float32))
+    final, ys = jax.lax.scan(step, init, xs)
+    return ys.swapaxes(0, 1).astype(x.dtype), final
+
+
+def quantize_ref(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=1)
+    scale = jnp.maximum(absmax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[:, None]), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)

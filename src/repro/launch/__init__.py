@@ -1,0 +1,5 @@
+"""Launch: production meshes, distributed steps, dry-run, roofline."""
+from .mesh import make_host_mesh, make_lane_mesh, make_production_mesh
+from .shapes import INPUT_SHAPES, InputShape, config_for_shape, input_specs
+
+__all__ = [k for k in dir() if not k.startswith("_")]

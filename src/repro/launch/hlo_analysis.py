@@ -1,0 +1,393 @@
+"""Exact static analysis of post-optimization SPMD HLO.
+
+XLA's ``compiled.cost_analysis()`` does NOT multiply ``while``-loop bodies
+by their trip counts, so a scanned 48-layer model reports ~1 layer of
+FLOPs. This module re-derives per-device FLOPs / HBM traffic / collective
+bytes from the HLO text with a call-graph walk:
+
+* every computation block is parsed into instructions (opcode, result
+  type, operands, attributes);
+* ``while`` ops carry ``known_trip_count`` in ``backend_config`` — the body
+  computation's costs are multiplied by it (nested loops multiply);
+* ``fusion`` ops count their *boundary* operands/results as memory traffic
+  (fusion internals stay on-chip) but internal ``dot``s still count FLOPs;
+* ``dot`` FLOPs = 2 × |result| × contraction size (from operand shapes and
+  ``lhs_contracting_dims``);
+* collective ops (all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute) accumulate operand bytes × multiplier.
+
+The module is per-device (SPMD), so all numbers are per-device.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _parse_type(s: str) -> Tuple[int, List[Tuple[str, List[int]]]]:
+    """Return (total bytes, list of (dtype, dims)) for a type string."""
+    total = 0
+    shapes = []
+    for m in _SHAPE_RE.finditer(s):
+        dt, dims_s = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in dims_s.split(",")] if dims_s else []
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+        shapes.append((dt, dims))
+    return total, shapes
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_type: str
+    result_bytes: int
+    result_shapes: List[Tuple[str, List[int]]]
+    operands: List[str]
+    raw: str
+
+    def attr(self, key: str) -> Optional[str]:
+        m = re.search(rf"{key}=\{{([^}}]*)\}}", self.raw)
+        return m.group(1) if m else None
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    by_name: Dict[str, Instr] = field(default_factory=dict)
+
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|\S+))\s+([\w\-]+)\((.*)$"
+)
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+# opcodes whose top-level appearance implies HBM traffic at their boundary
+_NO_TRAFFIC = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+def parse_module(hlo: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    entry = ""
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        hm = _COMP_HEADER.match(line)
+        if hm and ("->" in line):
+            cur = Computation(hm.group(1))
+            comps[cur.name] = cur
+            if line.startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        im = _INSTR_RE.match(line)
+        if not im:
+            continue
+        name, rtype, opcode, rest = im.groups()
+        # operand segment: up to the first "), " attribute boundary
+        op_seg = rest.split("),")[0]
+        operands = _OPERAND_RE.findall(op_seg)
+        rbytes, rshapes = _parse_type(rtype)
+        inst = Instr(
+            name=name, opcode=opcode, result_type=rtype, result_bytes=rbytes,
+            result_shapes=rshapes, operands=operands, raw=line,
+        )
+        cur.instrs.append(inst)
+        cur.by_name[name] = inst
+    return comps, entry
+
+
+def _dot_flops(inst: Instr, comp: Computation) -> float:
+    """2 × |result| × contraction size for a dot instruction."""
+    out_elems = 0
+    for _, dims in inst.result_shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        out_elems += n
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.raw)
+    contract = 1
+    if m and inst.operands:
+        lhs = comp.by_name.get(inst.operands[0])
+        if lhs and lhs.result_shapes:
+            dims = lhs.result_shapes[0][1]
+            for ix in m.group(1).split(","):
+                if ix and int(ix) < len(dims):
+                    contract *= dims[int(ix)]
+    return 2.0 * out_elems * max(contract, 1)
+
+
+_NORM_PAIR = {("bf16", "f32"), ("f32", "bf16"), ("f16", "f32"), ("f32", "f16")}
+
+
+def _is_float_normalization(inst: Instr, comp: Computation) -> bool:
+    """Same-shape bf16<->f32 convert (CPU float-normalization artifact)."""
+    if not inst.operands:
+        return False
+    src = comp.by_name.get(inst.operands[0])
+    if src is None or not src.result_shapes or not inst.result_shapes:
+        return False
+    sdt, sdims = src.result_shapes[0]
+    rdt, rdims = inst.result_shapes[0]
+    return sdims == rdims and (sdt, rdt) in _NORM_PAIR
+
+
+def _trip_count(inst: Instr) -> int:
+    m = re.search(r'known_trip_count.{0,6}?n.{0,4}?(\d+)', inst.raw)
+    return int(m.group(1)) if m else 1
+
+
+def _called_comps(inst: Instr) -> List[str]:
+    out = []
+    for key in ("calls", "body", "condition", "to_apply",
+                "called_computations"):
+        for m in re.finditer(rf"{key}=%?([\w.\-]+)", inst.raw):
+            out.append(m.group(1))
+    # conditional branches: "branch_computations={%a, %b}"
+    m = re.search(r"branch_computations=\{([^}]*)\}", inst.raw)
+    if m:
+        out.extend(_OPERAND_RE.findall(m.group(1)))
+    return out
+
+
+_SLICE_OPS = {"dynamic-slice", "gather", "slice"}
+
+
+def _param_index(inst: Instr) -> Optional[int]:
+    m = re.search(r"parameter\((\d+)\)", inst.raw)
+    return int(m.group(1)) if m else None
+
+
+def fusion_traffic(inst: Instr, comp: Computation, fused: Computation) -> float:
+    """HBM traffic at a fusion boundary.
+
+    Operands consumed only through slicing ops inside the fusion contribute
+    their *sliced* bytes (a scan body dynamic-slicing one layer out of the
+    (L, ...) stacked weights reads one layer, not L). A root
+    dynamic-update-slice writes its update, not the whole aliased buffer.
+    """
+    params: Dict[int, str] = {}
+    for fi in fused.instrs:
+        if fi.opcode == "parameter":
+            ix = _param_index(fi)
+            if ix is not None:
+                params[ix] = fi.name
+
+    transparent = {"convert", "bitcast", "copy", "reshape"}
+
+    def resolve(name: str) -> Optional[Instr]:
+        """Follow transparent single-operand chains to the producer."""
+        seen = 0
+        fi = fused.by_name.get(name)
+        while fi is not None and fi.opcode in transparent and fi.operands \
+                and seen < 8:
+            fi = fused.by_name.get(fi.operands[0])
+            seen += 1
+        return fi
+
+    def effective_consumers(pname: str) -> List[Instr]:
+        """Consumers of ``pname``, looking through transparent ops."""
+        out: List[Instr] = []
+        frontier = [pname]
+        seen: set = set()
+        while frontier:
+            nm = frontier.pop()
+            if nm in seen:
+                continue
+            seen.add(nm)
+            for fi in fused.instrs:
+                if nm in fi.operands:
+                    if fi.opcode in transparent:
+                        frontier.append(fi.name)
+                    else:
+                        out.append((nm, fi))
+        return out
+
+    dus_instrs = [fi for fi in fused.instrs
+                  if fi.opcode == "dynamic-update-slice"]
+    total = 0.0
+    for pos, op_name in enumerate(inst.operands):
+        full = comp.by_name[op_name].result_bytes if op_name in comp.by_name else 0
+        pname = params.get(pos)
+        if pname is None:
+            total += full
+            continue
+        consumers = effective_consumers(pname)
+        if not consumers:
+            total += full
+            continue
+        # consumer-wise: slices read their result size; DUS destinations are
+        # aliased passthrough (0 bytes); any other consumer reads it fully.
+        contrib = 0.0
+        for via, c in consumers:
+            if c.opcode in _SLICE_OPS and c.operands and c.operands[0] == via:
+                contrib += c.result_bytes
+            elif (c.opcode == "dynamic-update-slice" and c.operands
+                  and c.operands[0] == via):
+                contrib += 0.0
+            else:
+                contrib = full
+                break
+        total += contrib
+    # result side: a root that resolves (through converts) to dynamic-
+    # update-slices writes only the update slices — XLA aliases the
+    # destination buffer (in-place DUS; converts are CPU normalization).
+    root = fused.instrs[-1] if fused.instrs else None
+    root_names: List[str] = []
+    if root is not None:
+        root_names = list(root.operands) if root.opcode == "tuple" else [root.name]
+    resolved_roots = [resolve(nm) for nm in root_names]
+    if root is not None and resolved_roots and all(
+            fi is not None and fi.opcode == "dynamic-update-slice"
+            for fi in resolved_roots):
+        for fi in resolved_roots:
+            upd = resolve(fi.operands[1]) if len(fi.operands) > 1 else None
+            total += upd.result_bytes if upd is not None else fi.result_bytes
+    else:
+        total += inst.result_bytes
+    return total
+
+
+@dataclass
+class HLOStats:
+    flops: float = 0.0
+    traffic_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_op: Dict[str, float] = field(default_factory=dict)
+    collective_count: Dict[str, int] = field(default_factory=dict)
+
+
+def analyze(hlo: str) -> HLOStats:
+    comps, entry = parse_module(hlo)
+    stats = HLOStats()
+    if not entry:
+        return stats
+    visited_stack: List[str] = []
+
+    def operand_bytes(inst: Instr, comp: Computation) -> float:
+        total = 0.0
+        for op in inst.operands:
+            o = comp.by_name.get(op)
+            if o is not None:
+                total += o.result_bytes
+        return total
+
+    def walk(comp_name: str, mult: float, in_fusion: bool) -> None:
+        comp = comps.get(comp_name)
+        if comp is None or comp_name in visited_stack:
+            return
+        visited_stack.append(comp_name)
+        for inst in comp.instrs:
+            op = inst.opcode
+            if op == "dot":
+                stats.flops += mult * _dot_flops(inst, comp)
+                if not in_fusion:
+                    stats.traffic_bytes += mult * (
+                        inst.result_bytes + operand_bytes(inst, comp)
+                    )
+            elif op in ("convolution",):
+                # rare here (zoo convs run unscanned); approximate via result
+                stats.flops += mult * 2.0 * inst.result_bytes
+                if not in_fusion:
+                    stats.traffic_bytes += mult * (
+                        inst.result_bytes + operand_bytes(inst, comp)
+                    )
+            elif op == "fusion":
+                called = _called_comps(inst)
+                fused = comps.get(called[0]) if called else None
+                if fused is not None:
+                    stats.traffic_bytes += mult * fusion_traffic(inst, comp, fused)
+                else:
+                    stats.traffic_bytes += mult * (
+                        inst.result_bytes + operand_bytes(inst, comp)
+                    )
+                for c in called:
+                    walk(c, mult, True)
+            elif op == "while":
+                n = _trip_count(inst)
+                called = _called_comps(inst)
+                for c in called:
+                    walk(c, mult * n, in_fusion)
+            elif any(op.startswith(c) for c in COLLECTIVE_OPS):
+                base = next(c for c in COLLECTIVE_OPS if op.startswith(c))
+                if op.endswith("-done"):
+                    continue  # paired with -start; count once
+                nbytes = operand_bytes(inst, comp) or inst.result_bytes
+                stats.collective_bytes += mult * nbytes
+                stats.collective_by_op[base] = (
+                    stats.collective_by_op.get(base, 0.0) + mult * nbytes
+                )
+                stats.collective_count[base] = (
+                    stats.collective_count.get(base, 0) + int(mult)
+                )
+                stats.traffic_bytes += mult * (
+                    inst.result_bytes + (operand_bytes(inst, comp))
+                )
+            elif op in ("call", "custom-call", "conditional", "reduce",
+                        "sort", "scatter", "map", "reduce-window",
+                        "select-and-scatter"):
+                if op in ("call", "conditional", "custom-call", "map"):
+                    for c in _called_comps(inst):
+                        walk(c, mult, in_fusion)
+                if not in_fusion and op not in ("call", "conditional"):
+                    stats.traffic_bytes += mult * (
+                        inst.result_bytes + operand_bytes(inst, comp)
+                    )
+            elif op in _NO_TRAFFIC:
+                continue
+            elif op == "convert":
+                # CPU float normalization wraps bf16 elementwise ops in
+                # same-shape bf16<->f32 converts that do not exist on TPU;
+                # skip them so the memory term stays TPU-faithful.
+                if not in_fusion and not _is_float_normalization(inst, comp):
+                    stats.traffic_bytes += mult * (
+                        inst.result_bytes + operand_bytes(inst, comp)
+                    )
+            elif op in _SLICE_OPS:
+                if not in_fusion:   # read the slice, write the slice
+                    stats.traffic_bytes += mult * 2.0 * inst.result_bytes
+            elif op == "dynamic-update-slice":
+                # XLA updates in place when the destination is dead/donated
+                # (standard in-place-DUS optimization): traffic = the update
+                # slice read + written, not the full result buffer.
+                if not in_fusion and len(inst.operands) >= 2:
+                    upd = comp.by_name.get(inst.operands[1])
+                    nb = upd.result_bytes if upd else inst.result_bytes
+                    stats.traffic_bytes += mult * 2.0 * nb
+            else:
+                # plain elementwise / copy at top level: boundary traffic
+                if not in_fusion:
+                    stats.traffic_bytes += mult * (
+                        inst.result_bytes + operand_bytes(inst, comp)
+                    )
+        visited_stack.pop()
+
+    walk(entry, 1.0, False)
+    return stats

@@ -1,0 +1,34 @@
+"""Mesh construction for the production topology.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import, and tests/benches must keep seeing one device.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16×16 = 256-chip pod slice, or 2×16×16 = 512-chip two-pod mesh."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> Mesh:
+    """1×1 mesh on the host CPU device — smoke tests and examples."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_lane_mesh(chips_data: int, chips_model: int) -> Mesh:
+    """A lane sub-mesh for the multi-model serving adaptation."""
+    return jax.make_mesh((chips_data, chips_model), ("data", "model"))
+
+
+def required_devices(multi_pod: bool) -> int:
+    return 512 if multi_pod else 256

@@ -1,0 +1,175 @@
+"""Roofline analysis from compiled dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch × shape × mesh), all in seconds:
+
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = collective_bytes_per_device / link_bw
+
+``cost_analysis`` supplies FLOPs/bytes. Collective bytes are NOT in
+cost_analysis — we parse the partitioned HLO text and sum the operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute. The SPMD module is per-device, so parsed sizes are
+per-device; global = × chips.
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+TPU_PEAK_FLOPS = 197e12
+TPU_HBM_BW = 819e9
+TPU_ICI_BW = 50e9
+HBM_PER_CHIP = 16 * 1024 ** 3  # v5e: 16 GiB
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+# e.g. "bf16[16,128,2048]{2,1,0}" or "f32[]"
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# result name at line start: "  %name = ..." or "  name = ..."
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _TYPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: Dict[str, int] = field(default_factory=dict)
+    count_by_op: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum operand sizes of collective ops in a (per-device) HLO module."""
+    # symbol table: instruction name -> result byte size
+    sizes: Dict[str, int] = {}
+    lines = hlo_text.splitlines()
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # result type is the prefix of rhs up to the opcode token
+        sizes[name] = _type_bytes(rhs.split(" ")[0])
+    stats = CollectiveStats()
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        rhs = m.group(2)
+        for op in COLLECTIVE_OPS:
+            # opcode appears right after the result type, e.g.
+            # "bf16[...] all-gather(%x), ..." — avoid matching fusion names
+            if re.search(rf"\]\S*\s+{op}(-start|-done)?\(", rhs):
+                # operand list inside the first parens after the opcode
+                om = re.search(rf"{op}(?:-start|-done)?\(([^)]*)\)", rhs)
+                nbytes = 0
+                if om:
+                    for arg in om.group(1).split(","):
+                        arg = arg.strip().lstrip("%")
+                        nbytes += sizes.get(arg, 0)
+                if nbytes == 0:
+                    # fall back to the result size (start ops wrap operands)
+                    nbytes = _type_bytes(rhs.split(" ")[0])
+                stats.bytes_by_op[op] = stats.bytes_by_op.get(op, 0) + nbytes
+                stats.count_by_op[op] = stats.count_by_op.get(op, 0) + 1
+                break
+    return stats
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    per_device_flops: float
+    per_device_bytes: float
+    collective_bytes: float           # per device
+    collective_by_op: Dict[str, int]
+    model_flops: float                # 6·N·D or 2·N·D (global, useful work)
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    useful_ratio: float               # MODEL_FLOPS / (per_device_flops × chips)
+    memory_per_device: Optional[float] = None   # from memory_analysis
+    fits_hbm: Optional[bool] = None
+    notes: str = ""
+
+    def as_dict(self) -> Dict:
+        return dict(self.__dict__)
+
+
+def model_flops(cfg, shape) -> float:
+    """Useful-work FLOPs: 6·N_active·tokens (train) / 2·N_active·tokens."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch  # one token per sequence
+    return 2.0 * n * tokens
+
+
+def build_report(
+    arch: str,
+    shape,
+    mesh_name: str,
+    chips: int,
+    stats,                               # hlo_analysis.HLOStats (per device)
+    cfg,
+    memory_per_device: Optional[float] = None,
+) -> RooflineReport:
+    flops = float(stats.flops)
+    bytes_ = float(stats.traffic_bytes)
+    t_comp = flops / TPU_PEAK_FLOPS
+    t_mem = bytes_ / TPU_HBM_BW
+    t_coll = stats.collective_bytes / TPU_ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    useful = mf / max(flops * chips, 1.0)
+    return RooflineReport(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        per_device_flops=flops, per_device_bytes=bytes_,
+        collective_bytes=float(stats.collective_bytes),
+        collective_by_op={k: int(v) for k, v in stats.collective_by_op.items()},
+        model_flops=mf,
+        t_compute=t_comp, t_memory=t_mem, t_collective=t_coll,
+        bottleneck=bottleneck, useful_ratio=useful,
+        memory_per_device=memory_per_device,
+        fits_hbm=(memory_per_device < HBM_PER_CHIP) if memory_per_device else None,
+    )

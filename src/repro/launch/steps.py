@@ -1,0 +1,203 @@
+"""Jit-compiled distributed steps: train_step / prefill_step / serve_step.
+
+Each ``make_*`` builds the step function for a config plus the full
+in/out sharding trees for a mesh — consumed both by the real launcher
+(train.py / serve.py) and by the multi-pod dry-run (lower + compile with
+ShapeDtypeStructs, no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+from ..models.transformer import (
+    forward_decode,
+    forward_prefill,
+    forward_train,
+    init_cache,
+    init_params,
+    params_spec,
+)
+from ..sharding.context import activation_sharding
+from ..sharding.rules import (
+    batch_spec,
+    cache_shardings,
+    spec_for_shape,
+    tree_shardings,
+)
+from ..train.optimizer import make_optimizer
+from .shapes import InputShape, config_for_shape, input_specs
+
+
+def param_shapes(cfg: ModelConfig) -> Any:
+    return jax.eval_shape(functools.partial(init_params, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh) -> Any:
+    return tree_shardings(params_spec(cfg), param_shapes(cfg), mesh)
+
+
+def opt_state_shardings(opt_init, params_sds: Any, p_shardings: Any, mesh: Mesh
+                        ) -> Any:
+    """Optimizer-state shardings: full-size moments inherit the parameter
+    sharding; factored (vr/vc) and scalar leaves are replicated."""
+    state_sds = jax.eval_shape(opt_init, params_sds)
+    shard_by_shape: Dict[Tuple[Tuple[int, ...], str], Any] = {}
+    for sds, sh in zip(jax.tree.leaves(params_sds), jax.tree.leaves(p_shardings)):
+        shard_by_shape.setdefault(sds.shape, sh)
+    repl = NamedSharding(mesh, P())
+
+    def leaf(sds):
+        return shard_by_shape.get(sds.shape, repl)
+
+    return jax.tree.map(leaf, state_sds)
+
+
+def _dp_axes(mesh: Mesh, batch: int):
+    spec = batch_spec(mesh, batch)
+    return spec[0] if len(spec) else None
+
+
+def _batch_axes_tuple(mesh: Mesh, batch: int):
+    dp = _dp_axes(mesh, batch)
+    if dp is None:
+        return None
+    return tuple(dp) if isinstance(dp, (tuple, list)) else (dp,)
+
+
+def _vocab_axis(cfg: ModelConfig, mesh: Mesh):
+    """'model' when the vocab divides the axis (mamba2's 50280 and
+    whisper's 51865 do not divide 16 — replicate those logits)."""
+    return "model" if cfg.vocab_size % mesh.shape.get("model", 1) == 0 else None
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Vocab-sharding-friendly CE: one-hot einsum instead of gather so the
+    contraction over the (model-sharded) vocab axis stays a partial-sum +
+    small all-reduce, never an all-gather of the logits."""
+    logits32 = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits32, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    tgt = jnp.einsum("bsv,bsv->bs", logits32, onehot)
+    return jnp.mean(lse - tgt)
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    shape: InputShape,
+    optimizer: str = "adamw",
+):
+    """Returns (jitted step, in_shardings dict, arg ShapeDtypeStructs)."""
+    cfg = config_for_shape(cfg, shape)
+    opt_init, opt_update = make_optimizer(optimizer)
+    dp = _dp_axes(mesh, shape.global_batch)
+    has_cross = cfg.arch_type == "vlm" or cfg.is_encoder_decoder
+
+    ba = _batch_axes_tuple(mesh, shape.global_batch)
+
+    def train_step(params, opt_state, tokens, labels, cross_src=None):
+        with activation_sharding(ba):
+            def loss_fn(p):
+                logits = forward_train(p, cfg, tokens, cross_src, remat=True)
+                logits = jax.lax.with_sharding_constraint(
+                    logits, NamedSharding(mesh, P(dp, None, _vocab_axis(cfg, mesh)))
+                )
+                return cross_entropy(logits, labels)
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            new_params, new_opt = opt_update(grads, opt_state, params)
+            return new_params, new_opt, loss
+
+    p_sds = param_shapes(cfg)
+    p_sh = param_shardings(cfg, mesh)
+    o_sh = opt_state_shardings(opt_init, p_sds, p_sh, mesh)
+    o_sds = jax.eval_shape(opt_init, p_sds)
+    specs = input_specs(cfg, shape)
+    tok_sh = NamedSharding(mesh, P(dp, None))
+    in_shardings = [p_sh, o_sh, tok_sh, tok_sh]
+    args = [p_sds, o_sds, specs["tokens"], specs["labels"]]
+    if has_cross:
+        cr_sh = NamedSharding(mesh, P(dp, None, None))
+        in_shardings.append(cr_sh)
+        args.append(specs["cross_src"])
+    out_shardings = (p_sh, o_sh, NamedSharding(mesh, P()))
+    step = jax.jit(
+        train_step,
+        in_shardings=tuple(in_shardings),
+        out_shardings=out_shardings,
+        donate_argnums=(0, 1),
+    )
+    return step, tuple(args)
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh, shape: InputShape):
+    cfg = config_for_shape(cfg, shape)
+    dp = _dp_axes(mesh, shape.global_batch)
+    has_cross = cfg.arch_type == "vlm" or cfg.is_encoder_decoder
+
+    ba = _batch_axes_tuple(mesh, shape.global_batch)
+
+    def prefill_step(params, tokens, cross_src=None):
+        with activation_sharding(ba):
+            return forward_prefill(params, cfg, tokens, shape.seq_len, cross_src)
+
+    p_sds = param_shapes(cfg)
+    p_sh = param_shardings(cfg, mesh)
+    specs = input_specs(cfg, shape)
+    tok_sh = NamedSharding(mesh, P(dp, None))
+    in_sh = [p_sh, tok_sh]
+    args = [p_sds, specs["tokens"]]
+    if has_cross:
+        in_sh.append(NamedSharding(mesh, P(dp, None, None)))
+        args.append(specs["cross_src"])
+    step = jax.jit(prefill_step, in_shardings=tuple(in_sh))
+    return step, tuple(args)
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh, shape: InputShape):
+    """serve_step: ONE token against a seq_len KV cache."""
+    cfg = config_for_shape(cfg, shape)
+    dp = _dp_axes(mesh, shape.global_batch)
+
+    ba = _batch_axes_tuple(mesh, shape.global_batch)
+
+    def decode_step(params, token, caches, cache_len):
+        with activation_sharding(ba):
+            return forward_decode(params, cfg, token, caches, cache_len)
+
+    p_sds = param_shapes(cfg)
+    p_sh = param_shardings(cfg, mesh)
+    specs = input_specs(cfg, shape)
+    cache_sh = cache_shardings(cfg, mesh, specs["caches"])
+    tok_sh = NamedSharding(mesh, P(dp, None))
+    repl = NamedSharding(mesh, P())
+    step = jax.jit(
+        decode_step,
+        in_shardings=(p_sh, tok_sh, cache_sh, repl),
+        out_shardings=(
+            NamedSharding(mesh, P(dp, None, _vocab_axis(cfg, mesh))),
+            cache_sh,
+            repl,
+        ),
+        donate_argnums=(2,),
+    )
+    args = (p_sds, specs["token"], specs["caches"], specs["cache_len"])
+    return step, args
+
+
+def make_step(cfg: ModelConfig, mesh: Mesh, shape: InputShape,
+              optimizer: str = "adamw"):
+    """Dispatch by shape kind; returns (jitted fn, ShapeDtypeStruct args)."""
+    if shape.kind == "train":
+        return make_train_step(cfg, mesh, shape, optimizer)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, mesh, shape)
+    return make_decode_step(cfg, mesh, shape)

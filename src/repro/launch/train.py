@@ -1,0 +1,52 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [--smoke]``.
+
+On this CPU host, trains the reduced smoke variant of the chosen
+architecture on the synthetic Markov stream. On a real TPU slice the same
+entry point builds the production mesh and the pjit train step from
+``launch.steps`` (``--mesh single|multi``).
+"""
+from __future__ import annotations
+
+import argparse
+
+from ..configs import ALIASES, get_config, get_smoke_config
+from ..train import TrainConfig, train
+from ..train.optimizer import optimizer_for_config
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ALIASES), default="phi4-mini-3.8b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--checkpoint", default=None)
+    args = ap.parse_args()
+
+    import jax
+    n_dev = len(jax.devices())
+    cfg = get_smoke_config(args.arch) if n_dev == 1 else get_config(args.arch)
+    opt = optimizer_for_config(cfg)
+    print(f"[train] arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"optimizer={opt} devices={n_dev}")
+
+    cross_fn = None
+    if cfg.arch_type == "vlm":
+        import jax.numpy as jnp
+        cross_fn = lambda b: jnp.ones((b, cfg.num_image_tokens, cfg.d_model)) * 0.01
+    if cfg.is_encoder_decoder:
+        import jax.numpy as jnp
+        cross_fn = lambda b: jnp.ones((b, cfg.encoder_seq_len, cfg.d_model)) * 0.01
+
+    res = train(cfg, TrainConfig(
+        steps=args.steps, batch_size=args.batch, seq_len=args.seq,
+        lr=args.lr, optimizer=opt, log_every=max(args.steps // 10, 1),
+        checkpoint_path=args.checkpoint,
+    ), cross_src_fn=cross_fn)
+    print(f"[train] loss {res.losses[0]:.3f} -> {res.losses[-1]:.3f} "
+          f"(floor {res.loss_floor:.3f}); {res.tokens_per_s:,.0f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""JAX model stack: all assigned architecture families."""
+from .attention import blockwise_attention, cross_attention, decode_attention, project_qkv
+from .config import (
+    ATTN,
+    ATTN_MOE,
+    CROSS,
+    SSM,
+    SSM_MLP,
+    SSM_MOE,
+    ModelConfig,
+)
+from .layers import apply_rope, rms_norm, swiglu
+from .moe import load_balance_loss, moe_ffn, moe_ffn_dense, router_topk
+from .ssm import mamba2_decode_step, mamba2_mixer, ssd_chunked
+from .transformer import (
+    forward_decode,
+    forward_prefill,
+    forward_train,
+    init_cache,
+    init_params,
+    params_spec,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,121 @@
+"""Basic building blocks: norms, RoPE, SwiGLU, parameter initialization.
+
+Parameters are plain pytrees (nested dicts of jnp arrays). Every initializer
+has a twin ``*_spec`` returning the same structure with *logical axis*
+tuples per leaf; ``repro.sharding.rules`` maps logical axes to mesh axes.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * scale
+
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+           w_down: jnp.ndarray) -> jnp.ndarray:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def gelu_mlp(x: jnp.ndarray, w_up: jnp.ndarray, b_up: jnp.ndarray,
+             w_down: jnp.ndarray, b_down: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, w_up) + b_up)
+    return jnp.einsum("...f,fd->...d", h, w_down) + b_down
+
+
+# -- RoPE -----------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- initializers -------------------------------------------------------------
+
+def dense_init(key: jax.Array, shape: Tuple[int, ...], scale: Optional[float] = None,
+               dtype=jnp.float32) -> jnp.ndarray:
+    fan_in = shape[0]
+    s = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape) * s).astype(dtype)
+
+
+def init_mlp(key: jax.Array, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff), dtype=dtype),
+        "w_up": dense_init(k2, (d_model, d_ff), dtype=dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), dtype=dtype),
+    }
+
+
+def mlp_spec() -> Params:
+    return {
+        "w_gate": ("embed", "ffn"),
+        "w_up": ("embed", "ffn"),
+        "w_down": ("ffn", "embed"),
+    }
+
+
+def init_attention(key: jax.Array, d_model: int, num_heads: int, num_kv_heads: int,
+                   head_dim: int, qkv_bias: bool = False, qk_norm: bool = False,
+                   gated: bool = False, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "wq": dense_init(ks[0], (d_model, num_heads, head_dim), dtype=dtype),
+        "wk": dense_init(ks[1], (d_model, num_kv_heads, head_dim), dtype=dtype),
+        "wv": dense_init(ks[2], (d_model, num_kv_heads, head_dim), dtype=dtype),
+        "wo": dense_init(ks[3], (num_heads, head_dim, d_model), dtype=dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((num_heads, head_dim), dtype=dtype)
+        p["bk"] = jnp.zeros((num_kv_heads, head_dim), dtype=dtype)
+        p["bv"] = jnp.zeros((num_kv_heads, head_dim), dtype=dtype)
+    if qk_norm:
+        p["q_norm"] = jnp.ones((head_dim,), dtype=dtype)
+        p["k_norm"] = jnp.ones((head_dim,), dtype=dtype)
+    if gated:  # llama-3.2-vision cross-attn gates
+        p["attn_gate"] = jnp.zeros((1,), dtype=dtype)
+    return p
+
+
+def attention_spec(qkv_bias: bool = False, qk_norm: bool = False,
+                   gated: bool = False) -> Params:
+    p: Params = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if qkv_bias:
+        p["bq"] = ("heads", "head_dim")
+        p["bk"] = ("kv_heads", "head_dim")
+        p["bv"] = ("kv_heads", "head_dim")
+    if qk_norm:
+        p["q_norm"] = ("head_dim",)
+        p["k_norm"] = ("head_dim",)
+    if gated:
+        p["attn_gate"] = (None,)
+    return p

@@ -1,0 +1,153 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-based dispatch.
+
+Dispatch is *sort-based* (argsort by expert id → gather into an
+``(E, C, D)`` buffer → batched expert SwiGLU → scatter-combine), not the
+one-hot-matmul formulation: the einsum dispatch would add
+``T·E·C·D`` FLOPs — more than the expert compute itself at kimi-k2 scale —
+and would corrupt the roofline analysis. Gathers/scatters are memory ops.
+
+Under pjit, the expert dimension is sharded over the "model" mesh axis
+(expert parallelism); the token→expert permutation then lowers to an
+all-to-all, which the roofline accounts as collective bytes.
+
+``moe_ffn_dense`` is the small-scale oracle (computes every expert for
+every token and masks) used to property-test the dispatch path.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+Params = Dict[str, Any]
+
+
+def init_moe(key: jax.Array, d_model: int, num_experts: int, moe_d_ff: int,
+             dtype=jnp.float32) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "router": dense_init(k1, (d_model, num_experts), dtype=jnp.float32),
+        "w_gate": dense_init(k2, (num_experts, d_model, moe_d_ff), dtype=dtype),
+        "w_up": dense_init(k3, (num_experts, d_model, moe_d_ff), dtype=dtype),
+        "w_down": dense_init(k4, (num_experts, moe_d_ff, d_model), dtype=dtype),
+    }
+
+
+def moe_spec() -> Params:
+    return {
+        "router": ("embed", None),
+        "w_gate": ("experts", "embed", "ffn"),
+        "w_up": ("experts", "embed", "ffn"),
+        "w_down": ("experts", "ffn", "embed"),
+    }
+
+
+def router_topk(
+    x2d: jnp.ndarray, router_w: jnp.ndarray, k: int
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (gates (T,k) normalized, expert_idx (T,k), full probs (T,E))."""
+    logits = jnp.einsum("td,de->te", x2d.astype(jnp.float32), router_w)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)
+    gates = gates / jnp.maximum(gates.sum(axis=-1, keepdims=True), 1e-9)
+    return gates, idx, probs
+
+
+def load_balance_loss(probs: jnp.ndarray, idx: jnp.ndarray, num_experts: int) -> jnp.ndarray:
+    """Switch-style auxiliary loss: E * Σ_e f_e · P_e."""
+    t = probs.shape[0]
+    counts = jnp.zeros((num_experts,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    f = counts / jnp.maximum(idx.size, 1)
+    p = probs.mean(axis=0)
+    return num_experts * jnp.sum(f * p)
+
+
+def moe_ffn(
+    params: Params,
+    x: jnp.ndarray,                        # (B, S, D)
+    num_experts: int,
+    k: int,
+    capacity_factor: float = 1.25,
+    return_aux: bool = False,
+):
+    """Sort-based capacity-limited top-k MoE (FLOP count = active experts)."""
+    b, s, d = x.shape
+    t = b * s
+    x2d = x.reshape(t, d)
+    gates, idx, probs = router_topk(x2d, params["router"], k)
+
+    capacity = int(max(1, round(t * k / num_experts * capacity_factor)))
+    # flatten (token, slot_k) assignments
+    flat_expert = idx.reshape(-1)                        # (t*k,)
+    flat_gate = gates.reshape(-1)
+    flat_token = jnp.repeat(jnp.arange(t), k)
+    # stable sort by expert id groups assignments per expert
+    order = jnp.argsort(flat_expert, stable=True)
+    sorted_expert = flat_expert[order]
+    sorted_token = flat_token[order]
+    sorted_gate = flat_gate[order]
+    # rank within expert group = position - first position of that expert
+    # (`.at[].min` with a +inf-like init gives each expert's first position)
+    positions = jnp.arange(t * k)
+    seg_start = (
+        jnp.full((num_experts,), t * k, jnp.int32)
+        .at[sorted_expert]
+        .min(positions.astype(jnp.int32))
+    )
+    rank = positions - seg_start[sorted_expert]
+    keep = rank < capacity                                # capacity drop
+    slot = jnp.where(keep, rank, capacity)                # overflow -> slot C
+
+    # gather tokens into (E, C+1, D); slot C is a waste bucket. Keep the
+    # buffer in the WEIGHT dtype: einsum promotion to f32 was measured
+    # materializing full f32 copies of the expert weights every step
+    # (§Perf 1).
+    wdt = params["w_gate"].dtype
+    buf = jnp.zeros((num_experts, capacity + 1, d), wdt)
+    buf = buf.at[sorted_expert, slot].set(x2d.astype(wdt)[sorted_token])
+    buf = buf[:, :capacity]                               # (E, C, D)
+
+    # expert computation: batched SwiGLU over the expert dimension
+    g = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    h = jax.nn.silu(g) * u
+    y = jnp.einsum("ecf,efd->ecd", h, params["w_down"])   # (E, C, D)
+
+    # combine: scatter back with gate weights. The whole path stays in the
+    # activation dtype — f32 here doubled the (T·k, D) dispatch collectives
+    # that GSPMD emits for the cross-shard scatter (§Perf 3).
+    ypad = jnp.concatenate([y, jnp.zeros((num_experts, 1, d), y.dtype)], axis=1)
+    contrib = ypad[sorted_expert, slot] * sorted_gate[:, None].astype(y.dtype)
+    contrib = jnp.where(keep[:, None], contrib, jnp.zeros((), y.dtype))
+    out2d = jnp.zeros((t, d), y.dtype).at[sorted_token].add(contrib)
+    out = out2d.reshape(b, s, d).astype(x.dtype)
+    if return_aux:
+        aux = load_balance_loss(probs, idx, num_experts)
+        return out, aux
+    return out
+
+
+def moe_ffn_dense(
+    params: Params,
+    x: jnp.ndarray,
+    num_experts: int,
+    k: int,
+) -> jnp.ndarray:
+    """Oracle: compute all experts for all tokens, mask by routing.
+
+    Exponentially more FLOPs — for tests only (no capacity drops).
+    """
+    b, s, d = x.shape
+    x2d = x.reshape(b * s, d)
+    gates, idx, _ = router_topk(x2d, params["router"], k)
+    g = jnp.einsum("td,edf->tef", x2d, params["w_gate"])
+    u = jnp.einsum("td,edf->tef", x2d, params["w_up"])
+    h = jax.nn.silu(g) * u
+    y = jnp.einsum("tef,efd->ted", h, params["w_down"])   # (T, E, D)
+    weight = jnp.zeros((b * s, num_experts), y.dtype)
+    weight = weight.at[jnp.arange(b * s)[:, None], idx].set(gates.astype(y.dtype))
+    out = jnp.einsum("ted,te->td", y, weight)
+    return out.reshape(b, s, d)

@@ -1,0 +1,249 @@
+"""Mamba2 mixer via the SSD (state-space duality) chunked algorithm
+[arXiv:2405.21060].
+
+The sequence is split into chunks of length Q. Within a chunk the SSD
+computes an attention-like quadratic form (MXU-friendly on TPU); across
+chunks a low-rank recurrent state (B, H, P, N) is carried by a scan —
+O(S·Q) compute and O(1)-in-S decode state, which is what makes `long_500k`
+native for SSM/hybrid architectures.
+
+This module is also the pure-jnp oracle for the Pallas SSD kernel in
+``repro.kernels.ssd_scan``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rms_norm
+
+Params = Dict[str, Any]
+
+
+def init_mamba2(
+    key: jax.Array,
+    d_model: int,
+    d_inner: int,
+    ssm_state: int,
+    ssm_heads: int,
+    ssm_groups: int = 1,
+    conv_width: int = 4,
+    dtype=jnp.float32,
+) -> Params:
+    ks = jax.random.split(key, 6)
+    gn = ssm_groups * ssm_state
+    # in_proj packs [z (d_inner), x (d_inner), B (G*N), C (G*N), dt (H)]
+    proj_out = 2 * d_inner + 2 * gn + ssm_heads
+    return {
+        "in_proj": dense_init(ks[0], (d_model, proj_out), dtype=dtype),
+        "conv_w": dense_init(ks[1], (conv_width, d_inner + 2 * gn), scale=0.5,
+                             dtype=dtype),
+        "conv_b": jnp.zeros((d_inner + 2 * gn,), dtype=dtype),
+        "A_log": jnp.zeros((ssm_heads,), jnp.float32) + jnp.log(
+            jnp.linspace(1.0, 16.0, ssm_heads)
+        ),
+        "dt_bias": jnp.zeros((ssm_heads,), jnp.float32),
+        "D": jnp.ones((ssm_heads,), jnp.float32),
+        "norm": jnp.ones((d_inner,), dtype=dtype),
+        "out_proj": dense_init(ks[2], (d_inner, d_model), dtype=dtype),
+    }
+
+
+def mamba2_spec() -> Params:
+    return {
+        "in_proj": ("embed", "ssm_inner"),
+        "conv_w": (None, "ssm_inner"),
+        "conv_b": ("ssm_inner",),
+        "A_log": ("ssm_heads",),
+        "dt_bias": ("ssm_heads",),
+        "D": ("ssm_heads",),
+        "norm": ("ssm_inner",),
+        "out_proj": ("ssm_inner", "embed"),
+    }
+
+
+def _split_proj(proj, d_inner, gn, heads):
+    z = proj[..., :d_inner]
+    x = proj[..., d_inner : 2 * d_inner]
+    b = proj[..., 2 * d_inner : 2 * d_inner + gn]
+    c = proj[..., 2 * d_inner + gn : 2 * d_inner + 2 * gn]
+    dt = proj[..., 2 * d_inner + 2 * gn :]
+    return z, x, b, c, dt
+
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                  state: Optional[jnp.ndarray] = None
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv over (B, S, C); returns (y, new_state).
+
+    ``state`` is the trailing (width-1) inputs from the previous call
+    (used at decode time); None means zero history.
+    """
+    width = w.shape[0]
+    bsz, s, c = x.shape
+    if state is None:
+        state = jnp.zeros((bsz, width - 1, c), x.dtype)
+    xin = jnp.concatenate([state, x], axis=1)           # (B, S+w-1, C)
+    y = jnp.zeros((bsz, s, c), x.dtype)
+    for i in range(width):
+        y = y + xin[:, i : i + s, :] * w[i]
+    y = y + b
+    new_state = xin[:, -(width - 1):, :] if width > 1 else state
+    return jax.nn.silu(y), new_state
+
+
+def segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """Lower-triangular cumulative sums: out[..., i, j] = sum x[j+1..i]."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,          # (B, S, H, P) inputs per head
+    dt: jnp.ndarray,         # (B, S, H) softplus-ed step sizes
+    A: jnp.ndarray,          # (H,) negative decay rates (A = -exp(A_log))
+    Bm: jnp.ndarray,         # (B, S, G, N)
+    Cm: jnp.ndarray,         # (B, S, G, N)
+    chunk: int = 128,
+    initial_state: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD chunked scan. Returns (y (B,S,H,P), final_state (B,H,P,N)).
+
+    One sequential ``lax.scan`` over chunks carrying the (B,H,P,N) state;
+    each step computes the intra-chunk quadratic term, the carried-state
+    contribution, and the state update. Peak temporaries are O(B·H·Q²) for
+    a single chunk — never the all-chunks (B,nc,H,Q,Q) tensor (which at
+    train_4k scale is hundreds of GB and was the memory bottleneck of the
+    phase-separated formulation).
+    """
+    b, s, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    assert s % chunk == 0, f"seq {s} % chunk {chunk}"
+    nc = s // chunk
+    reps = h // g
+    Bh = jnp.repeat(Bm, reps, axis=2)                  # (B, S, H, N)
+    Ch = jnp.repeat(Cm, reps, axis=2)
+    # scan inputs: leading chunk axis
+    xc = x.reshape(b, nc, chunk, h, p).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(b, nc, chunk, h).transpose(1, 0, 2, 3).astype(jnp.float32)
+    Bc = Bh.reshape(b, nc, chunk, h, n).transpose(1, 0, 2, 3, 4)
+    Cc = Ch.reshape(b, nc, chunk, h, n).transpose(1, 0, 2, 3, 4)
+
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(state, inp):
+        xq, dtq, Bq, Cq = inp                          # (B,Q,H,P) (B,Q,H) ...
+        dA = dtq * A[None, None, :]                    # (B, Q, H), negative
+        dA_cum = jnp.cumsum(dA, axis=1)
+        total = dA_cum[:, -1]                          # (B, H)
+        # intra-chunk quadratic term
+        L = jnp.exp(segsum(dA.transpose(0, 2, 1)))     # (B, H, Q, Q)
+        scores = jnp.einsum("bqhn,bkhn->bhqk", Cq, Bq)
+        y_intra = jnp.einsum(
+            "bhqk,bhqk,bkh,bkhp->bqhp",
+            scores, L, dtq, xq.astype(jnp.float32),
+        )
+        # carried-state contribution
+        y_inter = jnp.einsum(
+            "bqhn,bhpn,bqh->bqhp", Cq, state, jnp.exp(dA_cum)
+        )
+        # state update
+        decay_to_end = jnp.exp(total[:, None, :] - dA_cum)   # (B, Q, H)
+        chunk_state = jnp.einsum(
+            "bqhn,bqh,bqh,bqhp->bhpn",
+            Bq, decay_to_end, dtq, xq.astype(jnp.float32),
+        )
+        new_state = chunk_state + jnp.exp(total)[:, :, None, None] * state
+        return new_state, (y_intra + y_inter).astype(x.dtype)
+
+    final_state, ys = jax.lax.scan(step, initial_state, (xc, dtc, Bc, Cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    return y, final_state
+
+
+def mamba2_mixer(
+    params: Params,
+    xin: jnp.ndarray,                     # (B, S, D)
+    cfg,
+    conv_state: Optional[jnp.ndarray] = None,
+    ssm_state: Optional[jnp.ndarray] = None,
+    return_state: bool = False,
+):
+    """Full Mamba2 block body (pre-norm residual handled by caller)."""
+    d_inner = cfg.d_inner
+    gn = cfg.ssm_groups * cfg.ssm_state
+    heads = cfg.ssm_heads
+    proj = jnp.einsum("bsd,dp->bsp", xin, params["in_proj"])
+    z, x, bm, cm, dt = _split_proj(proj, d_inner, gn, heads)
+    xbc = jnp.concatenate([x, bm, cm], axis=-1)
+    xbc, new_conv_state = causal_conv1d(xbc, params["conv_w"], params["conv_b"],
+                                        conv_state)
+    x = xbc[..., :d_inner]
+    bm = xbc[..., d_inner : d_inner + gn]
+    cm = xbc[..., d_inner + gn :]
+    b_, s_, _ = x.shape
+    xh = x.reshape(b_, s_, heads, cfg.ssm_head_dim)
+    bmh = bm.reshape(b_, s_, cfg.ssm_groups, cfg.ssm_state)
+    cmh = cm.reshape(b_, s_, cfg.ssm_groups, cfg.ssm_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y, new_ssm_state = ssd_chunked(
+        xh, dt, A, bmh, cmh, chunk=min(cfg.ssm_chunk, s_),
+        initial_state=ssm_state,
+    )
+    y = y + xh * params["D"][None, None, :, None]      # skip connection
+    y = y.reshape(b_, s_, d_inner).astype(xin.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps).astype(xin.dtype)
+    out = jnp.einsum("bsi,id->bsd", y, params["out_proj"])
+    if return_state:
+        return out, (new_conv_state, new_ssm_state)
+    return out
+
+
+def mamba2_decode_step(
+    params: Params,
+    xin: jnp.ndarray,                     # (B, 1, D)
+    cfg,
+    conv_state: jnp.ndarray,              # (B, width-1, d_inner+2GN)
+    ssm_state: jnp.ndarray,               # (B, H, P, N) fp32
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """O(1) single-token recurrent update (the SSM's decode advantage)."""
+    d_inner = cfg.d_inner
+    gn = cfg.ssm_groups * cfg.ssm_state
+    heads = cfg.ssm_heads
+    proj = jnp.einsum("bsd,dp->bsp", xin, params["in_proj"])
+    z, x, bm, cm, dt = _split_proj(proj, d_inner, gn, heads)
+    xbc = jnp.concatenate([x, bm, cm], axis=-1)
+    xbc, new_conv_state = causal_conv1d(xbc, params["conv_w"], params["conv_b"],
+                                        conv_state)
+    x = xbc[..., :d_inner]
+    bm = xbc[..., d_inner : d_inner + gn]
+    cm = xbc[..., d_inner + gn :]
+    b_ = x.shape[0]
+    xh = x.reshape(b_, heads, cfg.ssm_head_dim)        # S=1 squeezed
+    bmh = jnp.repeat(
+        bm.reshape(b_, cfg.ssm_groups, cfg.ssm_state), heads // cfg.ssm_groups, axis=1
+    )
+    cmh = jnp.repeat(
+        cm.reshape(b_, cfg.ssm_groups, cfg.ssm_state), heads // cfg.ssm_groups, axis=1
+    )
+    dt1 = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])[:, 0]  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt1 * A[None, :])                  # (B, H)
+    # h' = decay * h + dt * B ⊗ x
+    outer = jnp.einsum(
+        "bh,bhn,bhp->bhpn", dt1, bmh.astype(jnp.float32), xh.astype(jnp.float32)
+    )
+    new_state = decay[:, :, None, None] * ssm_state + outer
+    y = jnp.einsum("bhn,bhpn->bhp", cmh.astype(jnp.float32), new_state)
+    y = y + xh.astype(jnp.float32) * params["D"][None, :, None]
+    y = y.reshape(b_, 1, d_inner).astype(xin.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps).astype(xin.dtype)
+    out = jnp.einsum("bsi,id->bsd", y, params["out_proj"])
+    return out, (new_conv_state, new_state)

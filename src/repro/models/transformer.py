@@ -1,0 +1,510 @@
+"""Model assembly: pattern-scanned decoder stacks for every assigned family.
+
+The layer stack is a repeating *pattern* (``cfg.layout_pattern``); parameters
+are stacked over pattern repetitions and the forward pass is a
+``jax.lax.scan`` over repetitions, applying each pattern position inline.
+This keeps the lowered HLO size O(|pattern|) regardless of depth — essential
+for dry-running 61-72 layer models.
+
+Three entry points:
+* :func:`forward_train` — full-sequence logits (training / loss);
+* :func:`forward_prefill` — logits + populated caches;
+* :func:`forward_decode` — one token against caches (serve_step).
+
+Caches are pytrees mirroring the block structure:
+attention blocks carry (k, v); SSM blocks carry (conv_state, ssm_state) —
+O(1) in sequence length; cross-attention blocks carry precomputed (ck, cv)
+from the stub modality embeddings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (
+    attention_output,
+    blockwise_attention,
+    cross_attention,
+    decode_attention,
+    project_qkv,
+)
+from .config import ATTN, ATTN_MOE, CROSS, SSM, SSM_MLP, SSM_MOE, ModelConfig
+from .layers import (
+    attention_spec,
+    dense_init,
+    init_attention,
+    init_mlp,
+    mlp_spec,
+    rms_norm,
+    swiglu,
+)
+from .moe import init_moe, moe_ffn, moe_spec
+from .ssm import init_mamba2, mamba2_decode_step, mamba2_mixer, mamba2_spec
+from ..sharding.context import activation_sharding, constrain_batch
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+def _kind_has_self_attn(kind: str) -> bool:
+    return kind in (ATTN, ATTN_MOE)
+
+
+def _kind_has_ssm(kind: str) -> bool:
+    return kind.startswith("ssm")
+
+
+def _kind_ffn(kind: str, cfg: ModelConfig) -> str:
+    """'moe' | 'dense' | 'none' for the FFN half of the block."""
+    if kind.endswith("moe"):
+        return "moe"
+    if kind in (ATTN, CROSS, SSM_MLP):
+        return "dense" if cfg.d_ff else "none"
+    return "none"
+
+
+# ---------------------------------------------------------------------------
+# initialization
+# ---------------------------------------------------------------------------
+
+def init_block(key: jax.Array, kind: str, cfg: ModelConfig,
+               with_cross: bool = False) -> Params:
+    dt = _dtype(cfg)
+    ks = iter(jax.random.split(key, 8))
+    p: Params = {"ln1": jnp.ones((cfg.d_model,), dt)}
+    if _kind_has_self_attn(kind):
+        p["attn"] = init_attention(
+            next(ks), cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+            cfg.resolved_head_dim, qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm,
+            dtype=dt,
+        )
+    if kind == CROSS:
+        p["xattn"] = init_attention(
+            next(ks), cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+            cfg.resolved_head_dim, qk_norm=cfg.qk_norm, gated=True, dtype=dt,
+        )
+    if _kind_has_ssm(kind):
+        p["ssm"] = init_mamba2(
+            next(ks), cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads,
+            cfg.ssm_groups, cfg.ssm_conv_width, dtype=dt,
+        )
+    if with_cross and _kind_has_self_attn(kind):
+        # encoder-decoder: every decoder block cross-attends to the encoder
+        p["ln_cross"] = jnp.ones((cfg.d_model,), dt)
+        p["cross"] = init_attention(
+            next(ks), cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+            cfg.resolved_head_dim, dtype=dt,
+        )
+    ffn = _kind_ffn(kind, cfg)
+    if ffn != "none":
+        p["ln2"] = jnp.ones((cfg.d_model,), dt)
+    if ffn == "dense":
+        p["mlp"] = init_mlp(next(ks), cfg.d_model, cfg.d_ff, dtype=dt)
+    elif ffn == "moe":
+        p["moe"] = init_moe(next(ks), cfg.d_model, cfg.num_experts,
+                            cfg.moe_d_ff, dtype=dt)
+    return p
+
+
+def block_spec(kind: str, cfg: ModelConfig, with_cross: bool = False) -> Params:
+    p: Params = {"ln1": ("embed",)}
+    if _kind_has_self_attn(kind):
+        p["attn"] = attention_spec(cfg.qkv_bias, cfg.qk_norm)
+    if kind == CROSS:
+        p["xattn"] = attention_spec(False, cfg.qk_norm, gated=True)
+    if _kind_has_ssm(kind):
+        p["ssm"] = mamba2_spec()
+    if with_cross and _kind_has_self_attn(kind):
+        p["ln_cross"] = ("embed",)
+        p["cross"] = attention_spec()
+    ffn = _kind_ffn(kind, cfg)
+    if ffn != "none":
+        p["ln2"] = ("embed",)
+    if ffn == "dense":
+        p["mlp"] = mlp_spec()
+    elif ffn == "moe":
+        p["moe"] = moe_spec()
+    return p
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    dt = _dtype(cfg)
+    cfg.validate()
+    keys = jax.random.split(key, 8)
+    reps = cfg.pattern_repeats
+    params: Params = {
+        "embed": dense_init(keys[0], (cfg.vocab_size, cfg.d_model), scale=0.02,
+                            dtype=dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(keys[1], (cfg.d_model, cfg.vocab_size),
+                                    dtype=dt)
+    blocks = []
+    for j, kind in enumerate(cfg.layout_pattern):
+        bkeys = jax.random.split(jax.random.fold_in(keys[2], j), reps)
+        stacked = jax.vmap(
+            lambda k: init_block(k, kind, cfg, with_cross=cfg.is_encoder_decoder)
+        )(bkeys)
+        blocks.append(stacked)
+    params["blocks"] = tuple(blocks)
+    if cfg.is_encoder_decoder:
+        ekeys = jax.random.split(keys[3], cfg.encoder_layers)
+        params["encoder"] = {
+            "blocks": jax.vmap(lambda k: init_block(k, ATTN, cfg))(ekeys),
+            "final_norm": jnp.ones((cfg.d_model,), dt),
+        }
+    return params
+
+
+def params_spec(cfg: ModelConfig) -> Params:
+    spec: Params = {
+        "embed": ("vocab", "embed"),
+        "final_norm": ("embed",),
+    }
+    if not cfg.tie_embeddings:
+        spec["head"] = ("embed", "vocab")
+
+    def stack(tree):
+        return jax.tree.map(lambda axes: ("layers",) + tuple(axes), tree,
+                            is_leaf=lambda x: isinstance(x, tuple))
+
+    spec["blocks"] = tuple(
+        stack(block_spec(kind, cfg, with_cross=cfg.is_encoder_decoder))
+        for kind in cfg.layout_pattern
+    )
+    if cfg.is_encoder_decoder:
+        spec["encoder"] = {
+            "blocks": stack(block_spec(ATTN, cfg)),
+            "final_norm": ("embed",),
+        }
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# block forward
+# ---------------------------------------------------------------------------
+
+def block_forward_full(
+    p: Params,
+    kind: str,
+    cfg: ModelConfig,
+    x: jnp.ndarray,                     # (B, S, D)
+    positions: jnp.ndarray,             # (B, S)
+    cross_src: Optional[jnp.ndarray],   # (B, T, D) image/encoder embeddings
+    causal: bool = True,
+    want_cache: bool = False,
+):
+    """Full-sequence pass (train/prefill). Returns (x, cache | None)."""
+    cache: Dict[str, jnp.ndarray] = {}
+    window = cfg.sliding_window
+    if _kind_has_self_attn(kind):
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        q, k, v = project_qkv(
+            p["attn"], h, positions, cfg.rope_theta, cfg.qk_norm,
+            use_rope=True, norm_eps=cfg.norm_eps,
+        )
+        attn = blockwise_attention(q, k, v, causal=causal, window=window)
+        x = x + attention_output(p["attn"], attn)
+        if want_cache:
+            cache["k"], cache["v"] = k, v
+        if "cross" in p and cross_src is not None:
+            hc = rms_norm(x, p["ln_cross"], cfg.norm_eps)
+            x = x + cross_attention(p["cross"], hc, cross_src, cfg.norm_eps)
+            if want_cache:
+                ck = jnp.einsum("btd,dhk->bthk", cross_src, p["cross"]["wk"])
+                cv = jnp.einsum("btd,dhk->bthk", cross_src, p["cross"]["wv"])
+                cache["ck"], cache["cv"] = ck, cv
+    elif kind == CROSS:
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        x = x + cross_attention(p["xattn"], h, cross_src, cfg.norm_eps,
+                                qk_norm=cfg.qk_norm)
+        if want_cache:
+            ck = jnp.einsum("btd,dhk->bthk", cross_src, p["xattn"]["wk"])
+            cv = jnp.einsum("btd,dhk->bthk", cross_src, p["xattn"]["wv"])
+            cache["ck"], cache["cv"] = ck, cv
+    elif _kind_has_ssm(kind):
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        if want_cache:
+            y, (conv_st, ssm_st) = mamba2_mixer(p["ssm"], h, cfg,
+                                                return_state=True)
+            cache["conv"], cache["state"] = conv_st, ssm_st
+        else:
+            y = mamba2_mixer(p["ssm"], h, cfg)
+        x = x + y
+
+    ffn = _kind_ffn(kind, cfg)
+    if ffn == "dense":
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"], p["mlp"]["w_down"])
+    elif ffn == "moe":
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + moe_ffn(p["moe"], h, cfg.num_experts, cfg.experts_per_token,
+                        cfg.capacity_factor)
+    return x, (cache if want_cache else None)
+
+
+def block_forward_decode(
+    p: Params,
+    kind: str,
+    cfg: ModelConfig,
+    x: jnp.ndarray,                     # (B, 1, D)
+    position: jnp.ndarray,              # (B, 1) absolute position
+    cache: Dict[str, jnp.ndarray],
+    cache_len: jnp.ndarray,             # scalar int32
+):
+    """One-token decode. Returns (x, new_cache)."""
+    new_cache = dict(cache)
+    window = cfg.sliding_window
+    if _kind_has_self_attn(kind):
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        q, k, v = project_qkv(
+            p["attn"], h, position, cfg.rope_theta, cfg.qk_norm,
+            use_rope=True, norm_eps=cfg.norm_eps,
+        )
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), cache_len, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), cache_len, axis=1)
+        new_cache["k"], new_cache["v"] = ck, cv
+        attn = decode_attention(q, ck, cv, cache_len + 1, window=window)
+        x = x + attention_output(p["attn"], attn)
+        if "cross" in p:
+            hc = rms_norm(x, p["ln_cross"], cfg.norm_eps)
+            qc = jnp.einsum("bsd,dhk->bshk", hc, p["cross"]["wq"])
+            a = decode_attention(qc, cache["ck"], cache["cv"],
+                                 jnp.int32(cache["ck"].shape[1]))
+            x = x + attention_output(p["cross"], a)
+    elif kind == CROSS:
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        qc = jnp.einsum("bsd,dhk->bshk", h, p["xattn"]["wq"])
+        if cfg.qk_norm:
+            qc = rms_norm(qc, p["xattn"]["q_norm"], cfg.norm_eps)
+        a = decode_attention(qc, cache["ck"], cache["cv"],
+                             jnp.int32(cache["ck"].shape[1]))
+        y = attention_output(p["xattn"], a)
+        if "attn_gate" in p["xattn"]:
+            y = jnp.tanh(p["xattn"]["attn_gate"]) * y
+        x = x + y
+    elif _kind_has_ssm(kind):
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        y, (conv_st, ssm_st) = mamba2_decode_step(
+            p["ssm"], h, cfg, cache["conv"], cache["state"]
+        )
+        new_cache["conv"], new_cache["state"] = conv_st, ssm_st
+        x = x + y
+
+    ffn = _kind_ffn(kind, cfg)
+    if ffn == "dense":
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"], p["mlp"]["w_down"])
+    elif ffn == "moe":
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + moe_ffn(p["moe"], h, cfg.num_experts, cfg.experts_per_token,
+                        cfg.capacity_factor)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# stacks
+# ---------------------------------------------------------------------------
+
+def _scan_stack(
+    cfg: ModelConfig,
+    blocks: Tuple[Params, ...],
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    cross_src: Optional[jnp.ndarray],
+    causal: bool = True,
+    want_cache: bool = False,
+    remat: bool = False,
+):
+    """Scan over pattern repetitions; returns (x, caches per position)."""
+
+    def body(carry, rep_params):
+        h = constrain_batch(carry)
+        caches = []
+        for j, kind in enumerate(cfg.layout_pattern):
+            h, c = block_forward_full(
+                rep_params[j], kind, cfg, h, positions, cross_src,
+                causal=causal, want_cache=want_cache,
+            )
+            h = constrain_batch(h)
+            caches.append(c if want_cache else 0)
+        return h, tuple(caches)
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, caches = jax.lax.scan(body, x, blocks)
+    return x, caches
+
+
+def encode(params: Params, cfg: ModelConfig, frames: jnp.ndarray) -> jnp.ndarray:
+    """Encoder stack over stub frame embeddings (whisper)."""
+    enc = params["encoder"]
+    b, t, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(t), (b, t))
+
+    def body(carry, blk):
+        h, _ = block_forward_full(blk, ATTN, cfg, carry, pos, None, causal=False)
+        return h, 0
+
+    x, _ = jax.lax.scan(body, frames, enc["blocks"])
+    return rms_norm(x, enc["final_norm"], cfg.norm_eps)
+
+
+def forward_train(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,                  # (B, S) int32
+    cross_src: Optional[jnp.ndarray] = None,  # stub modality embeddings
+    remat: bool = True,
+) -> jnp.ndarray:
+    b, s = tokens.shape
+    x = constrain_batch(params["embed"][tokens])
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    if cfg.is_encoder_decoder and cross_src is not None:
+        cross_src = encode(params, cfg, cross_src)
+    x, _ = _scan_stack(cfg, params["blocks"], x, pos, cross_src, remat=remat)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return jnp.einsum("bsd,dv->bsv", x, head)
+
+
+def forward_prefill(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,
+    max_cache_len: int,
+    cross_src: Optional[jnp.ndarray] = None,
+):
+    """Returns (last-token logits, caches, cache_len)."""
+    b, s = tokens.shape
+    x = constrain_batch(params["embed"][tokens])
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    if cfg.is_encoder_decoder and cross_src is not None:
+        cross_src = encode(params, cfg, cross_src)
+    x, caches = _scan_stack(cfg, params["blocks"], x, pos, cross_src,
+                            want_cache=True)
+    caches = _pad_caches(cfg, caches, max_cache_len)
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    return logits, caches, jnp.int32(s)
+
+
+def _pad_caches(cfg: ModelConfig, caches, max_cache_len: int):
+    """Grow k/v caches to the serving capacity."""
+    out = []
+    for j, kind in enumerate(cfg.layout_pattern):
+        c = caches[j]
+        if isinstance(c, dict) and "k" in c:
+            pad = max_cache_len - c["k"].shape[2]   # (R, B, S, Kv, hd)
+            if pad > 0:
+                c = dict(c)
+                c["k"] = jnp.pad(c["k"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+                c["v"] = jnp.pad(c["v"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        out.append(c)
+    return tuple(out)
+
+
+def init_cache(
+    cfg: ModelConfig,
+    batch: int,
+    max_cache_len: int,
+    cross_len: int = 0,
+    dtype=None,
+):
+    """Empty serving caches for ``forward_decode`` (decode-only dry-run)."""
+    dt = dtype or _dtype(cfg)
+    reps = cfg.pattern_repeats
+    kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    caches = []
+    for kind in cfg.layout_pattern:
+        c: Dict[str, jnp.ndarray] = {}
+        if _kind_has_self_attn(kind):
+            # sliding-window models only retain the window in the cache
+            s = min(max_cache_len, cfg.sliding_window) if cfg.sliding_window else max_cache_len
+            c["k"] = jnp.zeros((reps, batch, s, kvh, hd), dt)
+            c["v"] = jnp.zeros((reps, batch, s, kvh, hd), dt)
+            if cfg.is_encoder_decoder:
+                c["ck"] = jnp.zeros((reps, batch, cross_len, kvh, hd), dt)
+                c["cv"] = jnp.zeros((reps, batch, cross_len, kvh, hd), dt)
+        if kind == CROSS:
+            c["ck"] = jnp.zeros((reps, batch, cross_len, kvh, hd), dt)
+            c["cv"] = jnp.zeros((reps, batch, cross_len, kvh, hd), dt)
+        if _kind_has_ssm(kind):
+            c["conv"] = jnp.zeros(
+                (reps, batch, cfg.ssm_conv_width - 1,
+                 cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state), dt)
+            c["state"] = jnp.zeros(
+                (reps, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                jnp.float32)
+        caches.append(c)
+    return tuple(caches)
+
+
+def forward_decode(
+    params: Params,
+    cfg: ModelConfig,
+    token: jnp.ndarray,                    # (B, 1) int32
+    caches,
+    cache_len: jnp.ndarray,                # scalar int32: tokens already cached
+    unroll: bool = True,
+):
+    """serve_step: one new token, updated caches.
+
+    The layer loop is UNROLLED by default (serving-framework practice):
+    scanning layers stacks cache updates through the scan's ys
+    dynamic-update-slice, and nesting the (dynamic) sequence-position DUS
+    inside it defeats XLA's in-place aliasing — measured as a full rewrite
+    of the 61-layer KV cache per decoded token at kimi-k2 scale (§Perf 1).
+    Unrolled, the per-layer cache index is static and aliasing holds; HLO
+    size is O(layers) but decode graphs are small.
+    """
+    b = token.shape[0]
+    x = params["embed"][token]
+    pos = jnp.broadcast_to(cache_len[None, None], (b, 1))
+
+    def one_block(h, rep_params_j, cache_j, kind):
+        if cfg.sliding_window and _kind_has_self_attn(kind):
+            write_pos = cache_len % cache_j["k"].shape[1]
+        else:
+            write_pos = cache_len
+        return block_forward_decode(rep_params_j, kind, cfg, h, pos,
+                                    cache_j, write_pos)
+
+    if unroll:
+        reps = cfg.pattern_repeats
+        cur = [dict(caches[j]) for j in range(len(cfg.layout_pattern))]
+        h = constrain_batch(x)
+        for r in range(reps):
+            for j, kind in enumerate(cfg.layout_pattern):
+                rep_params_j = jax.tree.map(lambda a: a[r], params["blocks"][j])
+                cache_j = {k: v[r] for k, v in cur[j].items()}
+                h, c = one_block(h, rep_params_j, cache_j, kind)
+                h = constrain_batch(h)
+                for k, v in c.items():
+                    # static layer index -> aliasable in-place update
+                    cur[j][k] = cur[j][k].at[r].set(v)
+        x = h
+        new_caches = tuple(cur)
+    else:
+        def body(carry, rep):
+            rep_params, rep_cache = rep
+            h = constrain_batch(carry)
+            new = []
+            for j, kind in enumerate(cfg.layout_pattern):
+                h, c = one_block(h, rep_params[j], rep_cache[j], kind)
+                new.append(c)
+            return h, tuple(new)
+
+        x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    return logits, new_caches, cache_len + 1

@@ -1,0 +1,8 @@
+"""Puzzle Runtime: Coordinator / Workers / Engines + memory optimizations."""
+from .coordinator import Coordinator, RequestState
+from .engine import ENGINE_REGISTRY, EagerEngine, Engine, FastMathJitEngine, JitEngine, make_engine
+from .runtime import PuzzleRuntime, RuntimeConfig
+from .tensorpool import CHUNK, SharedBufferTransport, TensorPool
+from .worker import Worker
+
+__all__ = [k for k in dir() if not k.startswith("_")]

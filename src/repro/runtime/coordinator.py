@@ -1,0 +1,163 @@
+"""Coordinator: the Runtime's external interface (paper §5.2, Fig. 9).
+
+Workflow: ① client request enters the queue → ② the coordinator finds
+subgraphs with resolved dependencies → ③ tasks go to Worker queues →
+④ Workers (de)quantize + execute → ⑤ results update request state →
+⑥ the final result returns to the client (a Future).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from ..core.chromosome import PlacedSubgraph
+from .worker import Worker
+
+
+@dataclass
+class RequestState:
+    request_id: int
+    group: int
+    networks: List[int]
+    submitted: float
+    future: Future = field(default_factory=Future)
+    remaining: int = 0
+    outputs: Dict[Tuple[int, int], Any] = field(default_factory=dict)
+    pending_deps: Dict[Tuple[int, int], int] = field(default_factory=dict)
+    first_start: Optional[float] = None
+    finish: Optional[float] = None
+    task_records: List[Dict] = field(default_factory=list)
+
+    @property
+    def makespan(self) -> Optional[float]:
+        if self.finish is None:
+            return None
+        return self.finish - self.submitted
+
+
+class Coordinator:
+    """Dependency-resolving dispatcher over per-processor Workers."""
+
+    def __init__(
+        self,
+        placed: Sequence[Sequence[PlacedSubgraph]],
+        workers: Dict[int, Worker],
+        executables: Dict[str, Any],
+    ):
+        self.placed = placed
+        self.workers = workers
+        self.executables = executables
+        self._lock = threading.Lock()
+        self._requests: Dict[int, RequestState] = {}
+        self._next_id = 0
+        self._seq = 0
+        # static dependency structure + engine pre-loading (Initialization)
+        self._deps: List[List[List[int]]] = []
+        self._succs: List[List[List[int]]] = []
+        self._owner: List[Dict[int, int]] = []
+        for plist in placed:
+            owner: Dict[int, int] = {}
+            for k, p in enumerate(plist):
+                for lid in p.subgraph.layer_ids:
+                    owner[lid] = k
+            deps = [sorted({owner[e.src] for e in p.subgraph.in_cut_edges()})
+                    for p in plist]
+            succs: List[List[int]] = [[] for _ in plist]
+            for k, d in enumerate(deps):
+                for pr in d:
+                    succs[pr].append(k)
+            self._deps.append(deps)
+            self._succs.append(succs)
+            self._owner.append(owner)
+        for plist in placed:
+            for p in plist:
+                w = workers[p.processor]
+                eng = w.engines[p.backend]
+                eng.load(p, executables)
+
+    # -- client API ------------------------------------------------------------
+    def submit(self, networks: Sequence[int], group: int = 0) -> RequestState:
+        with self._lock:
+            rid = self._next_id
+            self._next_id += 1
+            st = RequestState(
+                request_id=rid, group=group, networks=list(networks),
+                submitted=time.perf_counter(),
+            )
+            st.remaining = sum(len(self.placed[n]) for n in networks)
+            for n in networks:
+                for k, d in enumerate(self._deps[n]):
+                    st.pending_deps[(n, k)] = len(d)
+            self._requests[rid] = st
+        for n in networks:
+            for k, d in enumerate(self._deps[n]):
+                if not d:
+                    self._dispatch(st, n, k)
+        return st
+
+    # -- internal -----------------------------------------------------------
+    def _dispatch(self, st: RequestState, net: int, k: int) -> None:
+        p = self.placed[net][k]
+        inputs = None
+        if self._deps[net][k]:
+            inputs = []
+            for pk in self._deps[net][k]:
+                prod = self.placed[net][pk]
+                out = st.outputs[(net, pk)]
+                first = out[0] if isinstance(out, tuple) else out
+                inputs.append((first, prod.dtype))
+            # boundary inputs must match the subgraph arity; replicate the
+            # producer output for multi-input boundaries
+            model = self.executables[p.subgraph.graph.name]
+            _, example = model.build_subgraph_fn(p.subgraph.layer_ids, p.dtype)
+            while len(inputs) < len(example):
+                inputs.append(inputs[-1])
+            inputs = inputs[: len(example)]
+        with self._lock:
+            self._seq += 1
+            seq = self._seq
+        payload = {
+            "request": st.request_id,
+            "net": net,
+            "sg": k,
+            "dtype": p.dtype,
+            "backend": p.backend,
+            "engine_key": p.profile_key(),
+            "inputs": inputs,
+            "released": time.perf_counter(),
+        }
+        self.workers[p.processor].submit((p.priority, seq), payload)
+
+    def on_task_done(self, payload: Dict, result: Any, quant_t: float,
+                     exec_t: float) -> None:
+        rid, net, k = payload["request"], payload["net"], payload["sg"]
+        ready: List[Tuple[RequestState, int, int]] = []
+        with self._lock:
+            st = self._requests[rid]
+            if isinstance(result, Exception):
+                if not st.future.done():
+                    st.future.set_exception(result)
+                return
+            now = time.perf_counter()
+            if st.first_start is None:
+                st.first_start = payload["released"]
+            st.outputs[(net, k)] = result
+            st.remaining -= 1
+            st.task_records.append({
+                "net": net, "sg": k, "quant_s": quant_t, "exec_s": exec_t,
+                "wait_s": now - payload["released"] - exec_t - quant_t,
+            })
+            for s in self._succs[net][k]:
+                st.pending_deps[(net, s)] -= 1
+                if st.pending_deps[(net, s)] == 0:
+                    ready.append((st, net, s))
+            done = st.remaining == 0
+            if done:
+                st.finish = now
+        for st2, n2, k2 in ready:
+            self._dispatch(st2, n2, k2)
+        if done and not st.future.done():
+            st.future.set_result(st)

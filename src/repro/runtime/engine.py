@@ -1,0 +1,94 @@
+"""Engine: thin abstraction over execution backends (paper §5.1).
+
+Engines hide framework details from Workers — the paper wraps Qualcomm AI
+Engine Direct, ORT and TVM; here the backends are XLA-jit (``default``,
+fast path), XLA-jit with a second compilation profile (``xnnpack``
+analogue), and un-jitted op-by-op eval (``nnapi`` analogue — reliably the
+slowest, reproducing Table 2's ordering). New engines register via
+``ENGINE_REGISTRY``.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+
+from ..core.chromosome import PlacedSubgraph
+
+
+class Engine:
+    """Loads subgraphs once, executes many times (keyed by Merkle hash)."""
+
+    name = "base"
+
+    def __init__(self):
+        self._handles: Dict[str, Tuple[Callable, Tuple]] = {}
+        self._lock = threading.Lock()
+
+    def load(self, placed: PlacedSubgraph, executables: Dict[str, Any]) -> str:
+        key = placed.profile_key()
+        with self._lock:
+            if key not in self._handles:
+                model = executables[placed.subgraph.graph.name]
+                fn, example = model.build_subgraph_fn(
+                    placed.subgraph.layer_ids, placed.dtype
+                )
+                self._handles[key] = (self._prepare(fn, example), example)
+        return key
+
+    def _prepare(self, fn: Callable, example: Tuple) -> Callable:
+        raise NotImplementedError
+
+    def execute(self, key: str, inputs: Optional[Sequence] = None):
+        fn, example = self._handles[key]
+        args = inputs if inputs is not None else example
+        out = fn(*args)
+        jax.block_until_ready(out)
+        return out
+
+
+class JitEngine(Engine):
+    """XLA-compiled execution (the Qualcomm-SDK/ORT-default analogue)."""
+
+    name = "default"
+
+    def _prepare(self, fn, example):
+        jitted = jax.jit(fn)
+        jitted(*example)  # warm the cache at load time, like AOT compilation
+        return jitted
+
+
+class FastMathJitEngine(Engine):
+    """Second compiled profile (XNNPACK analogue): same semantics, a
+    different kernel selection — reduced matmul precision."""
+
+    name = "xnnpack"
+
+    def _prepare(self, fn, example):
+        def wrapped(*a):
+            with jax.default_matmul_precision("bfloat16"):
+                return fn(*a)
+        jitted = jax.jit(wrapped)
+        jitted(*example)
+        return jitted
+
+
+class EagerEngine(Engine):
+    """Un-jitted op-by-op execution — the NNAPI-like slow path."""
+
+    name = "nnapi"
+
+    def _prepare(self, fn, example):
+        return fn
+
+
+ENGINE_REGISTRY: Dict[str, Callable[[], Engine]] = {
+    "default": JitEngine,
+    "xnnpack": FastMathJitEngine,
+    "nnapi": EagerEngine,
+}
+
+
+def make_engine(backend: str) -> Engine:
+    return ENGINE_REGISTRY.get(backend, JitEngine)()

@@ -1,0 +1,114 @@
+"""PuzzleRuntime: user-facing assembly of Coordinator + Workers + Engines
+(paper §5), with the Tensor Pool and Zero-Copy Shared Buffer optimizations
+toggleable for the §5.3 ablation.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence
+
+from ..core.chromosome import PlacedSubgraph, Solution, decode_solution
+from ..core.graph import ModelGraph
+from ..core.processors import Processor
+from .coordinator import Coordinator, RequestState
+from .engine import ENGINE_REGISTRY, make_engine
+from .tensorpool import SharedBufferTransport, TensorPool
+from .worker import Worker
+
+
+@dataclass
+class RuntimeConfig:
+    tensor_pool: bool = True
+    shared_buffer: bool = True
+
+
+class PuzzleRuntime:
+    """Executes a Static Analyzer solution against real (reduced) models."""
+
+    def __init__(
+        self,
+        graphs: Sequence[ModelGraph],
+        solution: Solution,
+        processors: Sequence[Processor],
+        executables: Dict[str, Any],
+        config: Optional[RuntimeConfig] = None,
+    ):
+        self.cfg = config or RuntimeConfig()
+        self.placed = decode_solution(solution, graphs)
+        self.pool = TensorPool(enabled=self.cfg.tensor_pool)
+        self.transport = SharedBufferTransport(
+            self.pool, zero_copy=self.cfg.shared_buffer
+        )
+        self.workers: Dict[int, Worker] = {}
+        self._coordinator: Optional[Coordinator] = None
+
+        def on_done(payload, result, quant_t, exec_t):
+            assert self._coordinator is not None
+            self._coordinator.on_task_done(payload, result, quant_t, exec_t)
+
+        for proc in processors:
+            engines = {name: make_engine(name) for name in ENGINE_REGISTRY}
+            self.workers[proc.pid] = Worker(
+                proc.pid, proc.name, engines, self.pool, self.transport, on_done
+            )
+        self._coordinator = Coordinator(self.placed, self.workers, executables)
+        for w in self.workers.values():
+            w.start()
+
+    # -- serving ------------------------------------------------------------
+    def infer(self, networks: Sequence[int], group: int = 0) -> RequestState:
+        return self._coordinator.submit(networks, group)
+
+    def infer_sync(self, networks: Sequence[int], timeout: float = 60.0
+                   ) -> RequestState:
+        st = self.infer(networks)
+        return st.future.result(timeout=timeout)
+
+    def run_periodic(
+        self,
+        groups: Sequence[Sequence[int]],
+        periods: Sequence[float],
+        num_requests: int = 10,
+        timeout: float = 120.0,
+    ) -> List[List[RequestState]]:
+        """Drive periodic requests per model group; returns states per group."""
+        states: List[List[RequestState]] = [[] for _ in groups]
+        t0 = time.perf_counter()
+        issued = [0] * len(groups)
+        total = num_requests * len(groups)
+        while sum(issued) < total:
+            now = time.perf_counter() - t0
+            soonest = None
+            for g, period in enumerate(periods):
+                if issued[g] >= num_requests:
+                    continue
+                due = issued[g] * period
+                if due <= now:
+                    states[g].append(self.infer(groups[g], group=g))
+                    issued[g] += 1
+                else:
+                    soonest = min(soonest, due) if soonest is not None else due
+            if soonest is not None:
+                sleep = soonest - (time.perf_counter() - t0)
+                if sleep > 0:
+                    time.sleep(min(sleep, 0.01))
+        deadline = time.perf_counter() + timeout
+        for glist in states:
+            for st in glist:
+                st.future.result(timeout=max(0.1, deadline - time.perf_counter()))
+        return states
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "pool": self.pool.stats.__dict__,
+            "transport": self.transport.stats.__dict__,
+            "workers": {
+                pid: {"busy_s": w.busy_time, "tasks": w.tasks_done}
+                for pid, w in self.workers.items()
+            },
+        }
+
+    def close(self) -> None:
+        for w in self.workers.values():
+            w.stop()

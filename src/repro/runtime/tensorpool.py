@@ -1,0 +1,108 @@
+"""Tensor Pool and Zero-Copy Shared Buffer (paper §5.3).
+
+``TensorPool`` pre-allocates and recycles memory buffers in 2048-byte
+chunks (the paper's chunk size) so repeated inferences reuse the same
+physical pages — the paper measured −76.8% malloc time, −99.4% free time
+and −65.9% memcpy time from this. ``acquire`` returns a numpy view sized
+to the request, rounded up to chunk multiples so one buffer serves many
+tensor shapes.
+
+``SharedBufferTransport`` is the host analogue of the ION/DMA-BUF shared
+buffer: producers hand consumers a reference to the same backing store
+(zero-copy) instead of serializing through a staging copy.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+CHUNK = 2048  # bytes, paper §5.3
+
+
+@dataclass
+class PoolStats:
+    mallocs: int = 0
+    reuses: int = 0
+    frees: int = 0
+    bytes_allocated: int = 0
+    memcpy_bytes: int = 0
+    memcpy_calls: int = 0
+
+
+class TensorPool:
+    """Chunk-granular buffer pool with free-list reuse."""
+
+    def __init__(self, enabled: bool = True):
+        self.enabled = enabled
+        self._free: Dict[int, List[np.ndarray]] = {}
+        self._lock = threading.Lock()
+        self.stats = PoolStats()
+
+    def _rounded(self, nbytes: int) -> int:
+        return max(CHUNK, ((nbytes + CHUNK - 1) // CHUNK) * CHUNK)
+
+    def acquire(self, shape: Tuple[int, ...], dtype) -> np.ndarray:
+        nbytes = int(np.prod(shape)) * np.dtype(dtype).itemsize
+        size = self._rounded(nbytes)
+        if self.enabled:
+            with self._lock:
+                bucket = self._free.get(size)
+                if bucket:
+                    buf = bucket.pop()
+                    self.stats.reuses += 1
+                    return buf[:nbytes].view(dtype).reshape(shape)
+        self.stats.mallocs += 1
+        self.stats.bytes_allocated += size
+        buf = np.empty(size, dtype=np.uint8)
+        return buf[:nbytes].view(dtype).reshape(shape)
+
+    def release(self, arr: np.ndarray) -> None:
+        base = arr
+        while base.base is not None:
+            base = base.base
+        if not isinstance(base, np.ndarray) or base.dtype != np.uint8:
+            self.stats.frees += 1
+            return
+        if self.enabled:
+            with self._lock:
+                self._free.setdefault(base.nbytes, []).append(base)
+        else:
+            self.stats.frees += 1
+
+    def stage(self, src: np.ndarray) -> np.ndarray:
+        """Copy ``src`` into a pooled buffer (the marshalling path)."""
+        dst = self.acquire(src.shape, src.dtype)
+        np.copyto(dst, src)
+        self.stats.memcpy_calls += 1
+        self.stats.memcpy_bytes += src.nbytes
+        return dst
+
+
+@dataclass
+class TransportStats:
+    zero_copies: int = 0
+    staged_copies: int = 0
+    staged_bytes: int = 0
+
+
+class SharedBufferTransport:
+    """Inter-worker tensor hand-off: zero-copy when enabled, staged copy
+    through the pool otherwise (the paper's pre-DMA-BUF baseline)."""
+
+    def __init__(self, pool: TensorPool, zero_copy: bool = True):
+        self.pool = pool
+        self.zero_copy = zero_copy
+        self.stats = TransportStats()
+
+    def transfer(self, tensor) -> object:
+        if self.zero_copy:
+            self.stats.zero_copies += 1
+            return tensor            # same backing store crosses the boundary
+        arr = np.asarray(tensor)
+        out = self.pool.stage(arr)
+        self.stats.staged_copies += 1
+        self.stats.staged_bytes += arr.nbytes
+        return out

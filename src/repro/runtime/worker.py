@@ -1,0 +1,117 @@
+"""Worker: one per processor, non-preemptive execution (paper §5.1).
+
+Each Worker owns a priority task queue and two threads: a (de)quantization
+thread and an execution thread, connected by an internal queue — so
+dequantization of the next task overlaps execution of the current one,
+exactly the two-thread design in Fig. 9.
+"""
+from __future__ import annotations
+
+import heapq
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .engine import Engine, make_engine
+from .tensorpool import SharedBufferTransport, TensorPool
+
+
+@dataclass(order=True)
+class WorkerTask:
+    priority: Tuple
+    payload: Any = field(compare=False)
+
+
+_DTYPE_NP = {"fp32": np.float32, "fp16": np.float32, "int8": np.float32}
+
+
+class Worker:
+    """Dedicated executor for one processor id."""
+
+    def __init__(
+        self,
+        pid: int,
+        name: str,
+        engines: Dict[str, Engine],
+        pool: TensorPool,
+        transport: SharedBufferTransport,
+        on_done: Callable[[Any, Any, float, float], None],
+    ):
+        self.pid = pid
+        self.name = name
+        self.engines = engines
+        self.pool = pool
+        self.transport = transport
+        self.on_done = on_done
+        self._queue: "queue.PriorityQueue[Optional[WorkerTask]]" = queue.PriorityQueue()
+        self._exec_queue: "queue.Queue[Optional[Tuple]]" = queue.Queue(maxsize=4)
+        self._quant_thread = threading.Thread(target=self._quant_loop, daemon=True)
+        self._exec_thread = threading.Thread(target=self._exec_loop, daemon=True)
+        self.busy_time = 0.0
+        self.tasks_done = 0
+        self._stop = False
+
+    def start(self) -> None:
+        self._quant_thread.start()
+        self._exec_thread.start()
+
+    def submit(self, priority: Tuple, payload: Any) -> None:
+        self._queue.put(WorkerTask(priority, payload))
+
+    def stop(self) -> None:
+        self._stop = True
+        self._queue.put(None)
+
+    # -- dequant/staging thread ---------------------------------------------
+    def _quant_loop(self) -> None:
+        while True:
+            task = self._queue.get()
+            if task is None:
+                self._exec_queue.put(None)
+                return
+            payload = task.payload
+            t0 = time.perf_counter()
+            inputs = payload.get("inputs")
+            prepared = []
+            if inputs is not None:
+                for tensor, src_dtype in inputs:
+                    # dtype boundary: (de)quantize = convert through a pooled
+                    # staging buffer (mirrors the Worker dequant path)
+                    want = payload["dtype"]
+                    if src_dtype != want:
+                        arr = np.asarray(tensor, dtype=_DTYPE_NP[want])
+                        arr = self.pool.stage(arr)
+                        prepared.append(arr)
+                    else:
+                        prepared.append(self.transport.transfer(tensor))
+            quant_t = time.perf_counter() - t0
+            self._exec_queue.put((payload, prepared, quant_t))
+
+    # -- execution thread -----------------------------------------------------
+    def _exec_loop(self) -> None:
+        while True:
+            item = self._exec_queue.get()
+            if item is None:
+                return
+            payload, prepared, quant_t = item
+            engine: Engine = self.engines[payload["backend"]]
+            t0 = time.perf_counter()
+            try:
+                out = engine.execute(payload["engine_key"],
+                                     prepared if prepared else None)
+                err = None
+            except Exception as e:  # surface, don't kill the worker
+                out, err = None, e
+            exec_t = time.perf_counter() - t0
+            # staged input buffers are consumed by the engine call — return
+            # them to the pool (the Tensor Pool recycling path, §5.3)
+            for arr in prepared:
+                if isinstance(arr, np.ndarray):
+                    self.pool.release(arr)
+            self.busy_time += exec_t + quant_t
+            self.tasks_done += 1
+            self.on_done(payload, out if err is None else err, quant_t, exec_t)

@@ -1,0 +1,11 @@
+"""Sharding: logical-axis rules -> PartitionSpecs for the production mesh."""
+from .rules import (
+    DEFAULT_RULES,
+    batch_spec,
+    cache_shardings,
+    data_sharding,
+    spec_for_shape,
+    tree_shardings,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,67 @@
+"""Activation-sharding context.
+
+The model code is mesh-agnostic; the launcher declares which mesh axes
+carry the batch (and model) dimension of activations, and the forward pass
+pins activations to that layout with ``with_sharding_constraint`` at block
+boundaries. Without these constraints GSPMD is free to reshard the scan
+carry (observed: batch-sharding silently dropped inside the layer loop,
+replicating batch work 16×).
+
+Outside a mesh context (CPU smoke tests) the constraints are no-ops.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_STATE = {"batch_axes": None, "model_axis": None}
+
+
+@contextlib.contextmanager
+def activation_sharding(batch_axes: Optional[Tuple[str, ...]],
+                        model_axis: Optional[str] = "model"):
+    old = dict(_STATE)
+    _STATE["batch_axes"] = batch_axes
+    _STATE["model_axis"] = model_axis
+    try:
+        yield
+    finally:
+        _STATE.update(old)
+
+
+def batch_axes() -> Optional[Tuple[str, ...]]:
+    return _STATE["batch_axes"]
+
+
+def _spec(n_extra: int) -> Optional[P]:
+    ba = _STATE["batch_axes"]
+    if ba is None:
+        return None
+    b = ba if len(ba) > 1 else ba[0]
+    return P(b, *([None] * n_extra))
+
+
+def constrain_batch(x: jax.Array) -> jax.Array:
+    """Pin dim 0 of an activation to the declared batch axes."""
+    spec = _spec(x.ndim - 1)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_axes(x: jax.Array, *dim_axes: Optional[str]) -> jax.Array:
+    """Pin specific dims: dim 0 to the batch axes, others as given.
+
+    ``dim_axes`` covers dims 1..n; callers must pre-check divisibility for
+    any 'model'-axis assignment.
+    """
+    ba = _STATE["batch_axes"]
+    if ba is None:
+        return x
+    axes = [ba if len(ba) > 1 else ba[0]] + list(dim_axes)
+    while len(axes) < x.ndim:
+        axes.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*axes))

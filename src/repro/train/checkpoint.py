@@ -1,0 +1,80 @@
+"""Checkpointing: msgpack-serialized pytrees with atomic writes.
+
+Stores (params, opt_state, step, metadata). Arrays are serialized as
+(dtype, shape, raw bytes); bfloat16 round-trips through uint16 views.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _encode_array(a) -> Dict[str, Any]:
+    arr = np.asarray(a)
+    if arr.dtype == jnp.bfloat16:
+        return {"dtype": "bfloat16", "shape": list(arr.shape),
+                "data": arr.view(np.uint16).tobytes()}
+    return {"dtype": arr.dtype.str, "shape": list(arr.shape),
+            "data": arr.tobytes()}
+
+
+def _decode_array(d: Dict[str, Any]) -> np.ndarray:
+    shape = tuple(d["shape"])
+    if d["dtype"] == "bfloat16":
+        raw = np.frombuffer(d["data"], dtype=np.uint16).reshape(shape)
+        return raw.view(jnp.bfloat16)
+    return np.frombuffer(d["data"], dtype=np.dtype(d["dtype"])).reshape(shape)
+
+
+def save_checkpoint(path: str, params: Any, opt_state: Any = None,
+                    step: int = 0, meta: Optional[Dict] = None) -> None:
+    flat_p, tdef_p = jax.tree.flatten(params)
+    payload = {
+        "step": int(step),
+        "meta": meta or {},
+        "treedef_params": str(tdef_p),
+        "params": [_encode_array(a) for a in flat_p],
+    }
+    if opt_state is not None:
+        flat_o, tdef_o = jax.tree.flatten(opt_state)
+        payload["treedef_opt"] = str(tdef_o)
+        payload["opt"] = [_encode_array(a) for a in flat_o]
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)))
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(msgpack.packb(payload, use_bin_type=True))
+        os.replace(tmp, path)   # atomic
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def restore_checkpoint(path: str, params_like: Any,
+                       opt_state_like: Any = None
+                       ) -> Tuple[Any, Any, int, Dict]:
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    flat_p, tdef_p = jax.tree.flatten(params_like)
+    arrays = [_decode_array(d) for d in payload["params"]]
+    if len(arrays) != len(flat_p):
+        raise ValueError(
+            f"checkpoint has {len(arrays)} leaves, structure expects {len(flat_p)}"
+        )
+    params = tdef_p.unflatten(
+        [jnp.asarray(a, dtype=p.dtype) for a, p in zip(arrays, flat_p)]
+    )
+    opt_state = None
+    if opt_state_like is not None and "opt" in payload:
+        flat_o, tdef_o = jax.tree.flatten(opt_state_like)
+        arrays_o = [_decode_array(d) for d in payload["opt"]]
+        opt_state = tdef_o.unflatten(
+            [jnp.asarray(a, dtype=o.dtype) for a, o in zip(arrays_o, flat_o)]
+        )
+    return params, opt_state, payload["step"], payload.get("meta", {})

@@ -1,0 +1,98 @@
+"""Training loop: config-driven trainer usable on the host CPU (reduced
+configs) and, unchanged, on a production mesh (full configs).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.config import ModelConfig
+from ..models.transformer import forward_train, init_params
+from .checkpoint import restore_checkpoint, save_checkpoint
+from .data import DataConfig, MarkovDataset
+from .optimizer import make_optimizer
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 200
+    batch_size: int = 8
+    seq_len: int = 64
+    lr: float = 3e-3
+    optimizer: str = "adamw"
+    log_every: int = 20
+    checkpoint_path: Optional[str] = None
+    checkpoint_every: int = 100
+    seed: int = 0
+
+
+@dataclass
+class TrainResult:
+    losses: List[float]
+    steps: int
+    tokens_per_s: float
+    loss_floor: float             # data-generating entropy
+
+
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    tgt = jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(tgt)
+
+
+def train(model_cfg: ModelConfig, cfg: TrainConfig,
+          cross_src_fn: Optional[Callable[[int], jnp.ndarray]] = None
+          ) -> TrainResult:
+    key = jax.random.PRNGKey(cfg.seed)
+    params = init_params(model_cfg, key)
+    opt_init, opt_update = make_optimizer(cfg.optimizer, lr=cfg.lr)
+    opt_state = opt_init(params)
+    start_step = 0
+    if cfg.checkpoint_path:
+        import os
+        if os.path.exists(cfg.checkpoint_path):
+            params, opt_state, start_step, _ = restore_checkpoint(
+                cfg.checkpoint_path, params, opt_state
+            )
+    data = MarkovDataset(DataConfig(
+        vocab_size=model_cfg.vocab_size, seq_len=cfg.seq_len,
+        batch_size=cfg.batch_size, seed=cfg.seed,
+    ))
+
+    cross_src = cross_src_fn(cfg.batch_size) if cross_src_fn else None
+
+    @jax.jit
+    def step_fn(params, opt_state, tokens, labels, cross):
+        def loss_fn(p):
+            logits = forward_train(p, model_cfg, tokens, cross, remat=False)
+            return cross_entropy_loss(logits, labels)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        new_params, new_opt = opt_update(grads, opt_state, params)
+        return new_params, new_opt, loss
+
+    losses: List[float] = []
+    t0 = time.time()
+    batches = data.batches(start_step)
+    for step in range(start_step, cfg.steps):
+        tokens, labels = next(batches)
+        params, opt_state, loss = step_fn(
+            params, opt_state, jnp.asarray(tokens), jnp.asarray(labels), cross_src
+        )
+        losses.append(float(loss))
+        if cfg.log_every and (step + 1) % cfg.log_every == 0:
+            print(f"step {step+1:5d}  loss {losses[-1]:.4f}")
+        if cfg.checkpoint_path and (step + 1) % cfg.checkpoint_every == 0:
+            save_checkpoint(cfg.checkpoint_path, params, opt_state, step + 1)
+    dt = max(time.time() - t0, 1e-9)
+    tokens_total = (cfg.steps - start_step) * cfg.batch_size * cfg.seq_len
+    return TrainResult(
+        losses=losses, steps=cfg.steps,
+        tokens_per_s=tokens_total / dt,
+        loss_floor=data.entropy(),
+    )

@@ -1,0 +1,188 @@
+"""Optimizers: AdamW and Adafactor, implemented as pure pytree transforms.
+
+AdamW is the default for ≤ 32B-parameter configs. The 1T-parameter
+kimi-k2 (and 398B jamba) training state would not fit 16 GB/chip HBM with
+two fp32 Adam moments; they use Adafactor with factored second moments and
+bf16 first moment (DESIGN.md §6) — the standard memory/quality trade
+production frameworks make at that scale.
+
+Both expose ``init(params) -> state`` and
+``update(grads, state, params) -> (new_params, new_state)`` and are
+pjit-transparent (states inherit the parameter shardings).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+
+@dataclass(frozen=True)
+class AdafactorConfig:
+    lr: float = 1e-3
+    decay: float = 0.8           # t^-decay second-moment schedule
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    momentum: Optional[float] = 0.9   # bf16 first moment; None disables
+    weight_decay: float = 0.0
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    inner: Any
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(cfg: AdamWConfig = AdamWConfig()):
+    def init(params: Params) -> OptState:
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            inner={
+                "m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+            },
+        )
+
+    def update(grads: Params, state: OptState, params: Params
+               ) -> Tuple[Params, OptState]:
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - cfg.b1 ** t
+        bc2 = 1.0 - cfg.b2 ** t
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m_new = cfg.b1 * m + (1 - cfg.b1) * g32
+            v_new = cfg.b2 * v + (1 - cfg.b2) * g32 * g32
+            mh = m_new / bc1
+            vh = v_new / bc2
+            delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(
+                jnp.float32
+            )
+            return (p.astype(jnp.float32) - cfg.lr * delta).astype(p.dtype), m_new, v_new
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state.inner["m"])
+        flat_v = tdef.flatten_up_to(state.inner["v"])
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, OptState(step=step, inner={"m": new_m, "v": new_v})
+
+    return init, update
+
+
+# ---------------------------------------------------------------------------
+# Adafactor
+# ---------------------------------------------------------------------------
+
+def _factored_dims(shape: Tuple[int, ...]) -> Optional[Tuple[int, int]]:
+    """Last two non-trivial dims to factor over, or None for <2D."""
+    dims = [i for i, d in enumerate(shape) if d > 1]
+    if len(dims) < 2:
+        return None
+    return dims[-2], dims[-1]
+
+
+def adafactor(cfg: AdafactorConfig = AdafactorConfig()):
+    def init_leaf(p):
+        f = _factored_dims(p.shape)
+        leaf: Dict[str, Any] = {}
+        if f is None:
+            leaf["v"] = jnp.zeros_like(p, dtype=jnp.float32)
+        else:
+            r, c = f
+            vr_shape = tuple(d for i, d in enumerate(p.shape) if i != c)
+            vc_shape = tuple(d for i, d in enumerate(p.shape) if i != r)
+            leaf["vr"] = jnp.zeros(vr_shape, jnp.float32)
+            leaf["vc"] = jnp.zeros(vc_shape, jnp.float32)
+        if cfg.momentum is not None:
+            leaf["m"] = jnp.zeros_like(p, dtype=jnp.bfloat16)
+        return leaf
+
+    def init(params: Params) -> OptState:
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            inner=jax.tree.map(init_leaf, params),
+        )
+
+    def update(grads: Params, state: OptState, params: Params
+               ) -> Tuple[Params, OptState]:
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        beta2 = 1.0 - t ** -cfg.decay
+
+        def upd(p, g, st):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + cfg.eps
+            new_st = dict(st)
+            f = _factored_dims(p.shape)
+            if f is None:
+                v = beta2 * st["v"] + (1 - beta2) * g2
+                new_st["v"] = v
+                precond = jax.lax.rsqrt(v + cfg.eps)
+            else:
+                r, c = f
+                vr = beta2 * st["vr"] + (1 - beta2) * g2.mean(axis=c)
+                vc = beta2 * st["vc"] + (1 - beta2) * g2.mean(axis=r)
+                new_st["vr"], new_st["vc"] = vr, vc
+                # v ≈ (vr / mean(vr)) ⊗ vc  (rank-1 reconstruction)
+                vr_norm = vr / jnp.maximum(vr.mean(), cfg.eps)
+                v = jnp.expand_dims(vr_norm, c) * jnp.expand_dims(vc, r)
+                precond = jax.lax.rsqrt(v + cfg.eps)
+            u = g32 * precond
+            # update clipping by RMS
+            rms_u = jnp.sqrt(jnp.mean(u * u) + cfg.eps)
+            u = u / jnp.maximum(1.0, rms_u / cfg.clip_threshold)
+            if cfg.momentum is not None:
+                m = cfg.momentum * st["m"].astype(jnp.float32) + (1 - cfg.momentum) * u
+                new_st["m"] = m.astype(jnp.bfloat16)
+                u = m
+            delta = cfg.lr * u + cfg.lr * cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - delta).astype(p.dtype), new_st
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state.inner)
+        out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_s = tdef.unflatten([o[1] for o in out])
+        return new_p, OptState(step=step, inner=new_s)
+
+    return init, update
+
+
+def make_optimizer(name: str, lr: Optional[float] = None):
+    """'adamw' | 'adafactor' factory used by configs and the launcher."""
+    if name == "adamw":
+        cfg = AdamWConfig(lr=lr) if lr else AdamWConfig()
+        return adamw(cfg)
+    if name == "adafactor":
+        cfg = AdafactorConfig(lr=lr) if lr else AdafactorConfig()
+        return adafactor(cfg)
+    raise ValueError(f"unknown optimizer {name}")
+
+
+def optimizer_for_config(model_cfg) -> str:
+    """1T/400B-class models need factored state to fit HBM (DESIGN.md §6)."""
+    return "adafactor" if model_cfg.param_count() > 100e9 else "adamw"

@@ -1,0 +1,11 @@
+"""Mobile model zoo: the paper's nine networks + measured profile tables."""
+from .mobile import ExecutableMobileModel, all_cost_graphs, executable_zoo, make_cost_graph
+from .profiles import (
+    MODEL_NAMES,
+    MODEL_SPECS,
+    TABLE4_RATIO,
+    best_processor_times_s,
+    paper_profile_tables,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,196 @@
+"""Discrete-event engine and runtime simulator behaviour."""
+import pytest
+
+from repro.core import (
+    Environment,
+    NoiseModel,
+    PAPER_COMM_MODEL,
+    PriorityStore,
+    Profiler,
+    RuntimeSimulator,
+    chain_graph,
+    decode_solution,
+    mobile_processors,
+    Solution,
+)
+from repro.core.profiler import AnalyticMobileBackend
+
+
+# -- DES engine -----------------------------------------------------------
+
+def test_timeout_ordering():
+    env = Environment()
+    log = []
+
+    def proc(tag, delay):
+        yield env.timeout(delay)
+        log.append((tag, env.now))
+
+    env.process(proc("b", 2.0))
+    env.process(proc("a", 1.0))
+    env.run()
+    assert log == [("a", 1.0), ("b", 2.0)]
+
+
+def test_process_chain_and_store():
+    env = Environment()
+    store = PriorityStore(env)
+    got = []
+
+    def consumer():
+        while True:
+            item = yield store.get()
+            got.append((item, env.now))
+
+    def producer():
+        yield env.timeout(1.0)
+        store.put("low", priority=5)
+        store.put("high", priority=1)
+        yield env.timeout(1.0)
+        store.put("later", priority=0)
+
+    env.process(consumer())
+    env.process(producer())
+    env.run(until=10)
+    # 'low' delivered first (consumer already waiting when it was put),
+    # then 'high' (by priority among queued), then 'later'.
+    assert [g[0] for g in got] == ["low", "high", "later"]
+
+
+def test_priority_store_fifo_within_priority():
+    env = Environment()
+    store = PriorityStore(env)
+    store.put("x", priority=1)
+    store.put("y", priority=1)
+    store.put("z", priority=0)
+    order = []
+
+    def consumer():
+        for _ in range(3):
+            item = yield store.get()
+            order.append(item)
+
+    env.process(consumer())
+    env.run()
+    assert order == ["z", "x", "y"]
+
+
+# -- runtime simulator -------------------------------------------------------
+
+def _one_model_setup(n_layers=4, cuts=None, procs_map=None):
+    g = chain_graph("m", [("conv", 50e6, 1000, 50_000)] * n_layers)
+    graphs = [g]
+    procs = mobile_processors()
+    prof = Profiler(AnalyticMobileBackend(procs))
+    cuts = cuts or [0] * g.num_edges
+    mapping = procs_map or [2] * n_layers
+    sol = Solution(
+        partition=[cuts], mapping=[mapping], priority=[0], dtype=[1], backend=[0]
+    )
+    placed = decode_solution(sol, graphs)
+    return placed, procs, prof
+
+
+def test_single_model_makespan_equals_exec_plus_comm():
+    placed, procs, prof = _one_model_setup()
+    sim = RuntimeSimulator(
+        placed, procs, prof, PAPER_COMM_MODEL,
+        groups=[[0]], periods=[10.0], num_requests=3,
+    )
+    res = sim.run()
+    ms = res.makespans(0)
+    assert len(ms) == 3
+    exec_t = prof.subgraph_time(placed[0][0])
+    comm_in = PAPER_COMM_MODEL.cost(placed[0][0].subgraph.input_bytes())
+    assert ms[0] == pytest.approx(exec_t + comm_in, rel=1e-6)
+    # uncontended: all requests identical
+    assert ms[0] == pytest.approx(ms[-1], rel=1e-6)
+
+
+def test_queueing_under_tight_period():
+    placed, procs, prof = _one_model_setup()
+    exec_t = prof.subgraph_time(placed[0][0])
+    tight = exec_t * 0.5
+    sim = RuntimeSimulator(
+        placed, procs, prof, PAPER_COMM_MODEL,
+        groups=[[0]], periods=[tight], num_requests=8,
+    )
+    res = sim.run()
+    ms = res.makespans(0)
+    assert ms[-1] > ms[0] * 2  # queue grows when period < service time
+
+
+def test_partition_pipelining_improves_throughput():
+    # chain cut in half across two *identical* processors: steady-state
+    # throughput doubles (pipelining across requests), so under a period
+    # below the whole-model service time the cut solution stays stable
+    # while the whole-model one diverges.
+    from repro.core import Processor
+
+    twin = tuple(
+        Processor(
+            pid=i, name=f"acc{i}", kind="npu",
+            throughput=((("fp16", "default"), 1.6e12),),
+            invocation_overhead=1e-6, layer_overhead=0.0,
+            fragmentation_ratio=1.0,
+        )
+        for i in range(2)
+    )
+    g = chain_graph("m", [("conv", 500e6, 1000, 50_000)] * 4)
+    prof = Profiler(AnalyticMobileBackend(twin))
+    whole = Solution(partition=[[0, 0, 0]], mapping=[[0] * 4],
+                     priority=[0], dtype=[1], backend=[0])
+    cut = Solution(partition=[[0, 1, 0]], mapping=[[0, 0, 1, 1]],
+                   priority=[0], dtype=[1], backend=[0])
+    placed_whole = decode_solution(whole, [g])
+    placed_cut = decode_solution(cut, [g])
+    service = prof.subgraph_time(placed_whole[0][0])
+    period = service * 0.7
+    run = lambda placed: RuntimeSimulator(
+        placed, twin, prof, PAPER_COMM_MODEL,
+        groups=[[0]], periods=[period], num_requests=12, input_home_pid=0,
+    ).run().makespans(0)
+    ms_whole, ms_cut = run(placed_whole), run(placed_cut)
+    assert ms_whole[-1] > ms_whole[0] * 2      # diverging queue
+    assert ms_cut[-1] < ms_cut[0] * 1.5        # pipeline keeps up
+    assert ms_cut[-1] < ms_whole[-1]
+
+
+def test_noise_determinism_and_effect():
+    placed, procs, prof = _one_model_setup()
+    mk = lambda seed: RuntimeSimulator(
+        placed, procs, prof, PAPER_COMM_MODEL,
+        groups=[[0]], periods=[1.0], num_requests=5,
+        noise=NoiseModel(seed=seed),
+    ).run().makespans(0)
+    a, b, c = mk(1), mk(1), mk(2)
+    assert a == b                      # same seed -> same trace
+    assert a != c                      # different seed -> different trace
+    assert len(set(a)) > 1             # noise varies across requests
+
+
+def test_dispatch_overhead_occupies_cpu():
+    # model mapped to CPU: dispatch stubs compete with its tasks
+    placed, procs, prof = _one_model_setup(procs_map=[0, 0, 0, 0])
+    base = RuntimeSimulator(
+        placed, procs, prof, PAPER_COMM_MODEL,
+        groups=[[0]], periods=[1.0], num_requests=4,
+    ).run().makespans(0)[0]
+    loaded = RuntimeSimulator(
+        placed, procs, prof, PAPER_COMM_MODEL,
+        groups=[[0]], periods=[1.0], num_requests=4,
+        dispatch_overhead=5e-3,
+    ).run().makespans(0)[0]
+    assert loaded > base
+
+
+def test_utilization_accounting():
+    placed, procs, prof = _one_model_setup()
+    sim = RuntimeSimulator(
+        placed, procs, prof, PAPER_COMM_MODEL,
+        groups=[[0]], periods=[0.5], num_requests=4,
+    )
+    res = sim.run()
+    assert res.busy_time[2] > 0.0
+    assert res.busy_time[1] == 0.0
+    assert 0.0 < res.utilization(2) <= 1.0

@@ -1,0 +1,147 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (
+    attention_ref,
+    flash_attention,
+    flash_attention_bshd,
+    quantize_int8,
+    quantize_ref,
+    ssd_bshp,
+    ssd_ref,
+    ssd_scan,
+)
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=2e-5, atol=2e-5)
+
+
+# -- flash attention ------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bh,sq,sk,hd,g", [
+    (2, 128, 128, 64, 1),
+    (4, 256, 256, 128, 2),
+    (2, 100, 100, 64, 1),     # ragged: padding path
+    (3, 64, 192, 32, 3),      # cross-length + GQA 3
+])
+def test_flash_attention_matches_ref(bh, sq, sk, hd, g, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (bh, sq, hd), dtype)
+    k = jax.random.normal(ks[1], (bh // g, sk, hd), dtype)
+    v = jax.random.normal(ks[2], (bh // g, sk, hd), dtype)
+    causal = sq == sk
+    got = flash_attention(q, k, v, q_heads_per_kv=g, causal=causal,
+                          block_q=64, block_k=64, interpret=True)
+    want = attention_ref(q, k, v, q_heads_per_kv=g, causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_sliding_window():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 256, 64))
+    k = jax.random.normal(ks[1], (2, 256, 64))
+    v = jax.random.normal(ks[2], (2, 256, 64))
+    got = flash_attention(q, k, v, causal=True, window=64,
+                          block_q=64, block_k=64, interpret=True)
+    want = attention_ref(q, k, v, causal=True, window=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_q_offset_continuation():
+    """Prefill continuation: q is a suffix of the sequence."""
+    ks = jax.random.split(KEY, 3)
+    k = jax.random.normal(ks[1], (1, 128, 64))
+    v = jax.random.normal(ks[2], (1, 128, 64))
+    q_full = jax.random.normal(ks[0], (1, 128, 64))
+    full = flash_attention(q_full, k, v, causal=True, block_q=32, block_k=32,
+                           interpret=True)
+    tail = flash_attention(q_full[:, 96:], k, v, causal=True, q_offset=96,
+                           block_q=32, block_k=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(tail), np.asarray(full[:, 96:]),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bshd_wrapper_matches_model_path():
+    from repro.models import blockwise_attention
+    ks = jax.random.split(KEY, 3)
+    b, s, h, kv, hd = 2, 128, 8, 2, 64
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, kv, hd))
+    v = jax.random.normal(ks[2], (b, s, kv, hd))
+    got = flash_attention_bshd(q, k, v, causal=True)
+    want = blockwise_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+# -- SSD scan -----------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bh,s,p,n,chunk", [
+    (2, 64, 32, 16, 16),
+    (4, 128, 64, 32, 32),
+    (2, 128, 64, 128, 64),
+])
+def test_ssd_scan_matches_recurrence(bh, s, p, n, chunk, dtype):
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (bh, s, p), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bh, s))).astype(jnp.float32)
+    A = -jnp.exp(jax.random.normal(ks[2], (bh,)) * 0.3)
+    Bm = (jax.random.normal(ks[3], (bh, s, n)) * 0.3).astype(dtype)
+    Cm = (jax.random.normal(ks[0], (bh, s, n)) * 0.3).astype(dtype)
+    y, st = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    y_ref, st_ref = ssd_ref(x, dt, A, Bm, Cm)
+    tol = dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), **tol)
+    # ssd_ref returns state as (BH, N, P)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_ref), **tol)
+
+
+def test_ssd_bshp_wrapper_matches_model_ssd():
+    from repro.models import ssd_chunked
+    ks = jax.random.split(KEY, 4)
+    b, s, h, p, g, n = 2, 64, 4, 16, 1, 16
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (b, s, g, n)) * 0.3
+    Cm = jax.random.normal(ks[0], (b, s, g, n)) * 0.3
+    y_kernel, st_kernel = ssd_bshp(x, dt, A, Bm, Cm, chunk=16)
+    y_model, st_model = ssd_chunked(x, dt, A, Bm, Cm, chunk=16)
+    np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_model),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_kernel), np.asarray(st_model),
+                               rtol=2e-4, atol=2e-4)
+
+
+# -- int8 quantization ------------------------------------------------------
+
+@pytest.mark.parametrize("r,c", [(16, 64), (100, 128), (256, 32)])
+def test_quantize_matches_ref(r, c):
+    x = jax.random.normal(KEY, (r, c)) * 3.0
+    q, s = quantize_int8(x, block_rows=64, interpret=True)
+    q_ref, s_ref = quantize_ref(x)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q_ref))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), rtol=1e-6)
+
+
+def test_quantize_roundtrip_error_bounded():
+    from repro.kernels import dequantize_int8
+    x = jax.random.normal(KEY, (64, 128)) * 5.0
+    q, s = quantize_int8(x, interpret=True)
+    back = dequantize_int8(q, s)
+    err = np.abs(np.asarray(back) - np.asarray(x)).max()
+    scale_max = float(np.asarray(s).max())
+    assert err <= scale_max  # quantization error bounded by one step

@@ -1,0 +1,99 @@
+"""NSGA machinery + chromosome operators."""
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    SolutionFactory,
+    chain_graph,
+    das_dennis,
+    decode_solution,
+    dominates,
+    fast_non_dominated_sort,
+    nsga3_select,
+    subgraph_processor,
+)
+from repro.core.chromosome import upmx
+
+
+def test_dominates():
+    assert dominates((1, 1), (2, 2))
+    assert dominates((1, 2), (1, 3))
+    assert not dominates((1, 3), (2, 2))
+    assert not dominates((1, 1), (1, 1))
+
+
+def test_fronts_simple():
+    fits = [(1, 1), (2, 2), (0, 3), (3, 0), (2, 0.5)]
+    fronts = fast_non_dominated_sort(fits)
+    assert set(fronts[0]) == {0, 2, 3, 4}
+    assert set(fronts[1]) == {1}
+
+
+def test_das_dennis_count():
+    # C(n+d-1, d) points for d divisions, n objectives
+    pts = das_dennis(3, 4)
+    assert len(pts) == 15
+    for p in pts:
+        assert abs(sum(p) - 1.0) < 1e-9
+
+
+def test_nsga3_preserves_first_front():
+    fits = [(1.0, 4.0), (2.0, 3.0), (3.0, 2.0), (4.0, 1.0),  # front 0
+            (5.0, 5.0), (6.0, 6.0)]
+    sel = nsga3_select(fits, 4, rng=random.Random(0))
+    assert sorted(sel) == [0, 1, 2, 3]
+
+
+def test_nsga3_niching_spreads():
+    # 8 points on front 0; select 4 -> should cover spread, not cluster
+    fits = [(i, 7 - i) for i in range(8)]
+    sel = nsga3_select(fits, 4, rng=random.Random(0))
+    assert len(sel) == 4
+    assert len(set(sel)) == 4
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.integers(2, 12), st.integers(0, 10_000))
+def test_upmx_permutation_property(n, seed):
+    rng = random.Random(seed)
+    p1 = list(range(n)); rng.shuffle(p1)
+    p2 = list(range(n)); rng.shuffle(p2)
+    c1, c2 = upmx(p1, p2, rng)
+    assert sorted(c1) == list(range(n))
+    assert sorted(c2) == list(range(n))
+
+
+def _factory(n_models=3, n_layers=5):
+    graphs = [chain_graph(f"m{i}", [("conv", 1e6, 10, 100)] * n_layers)
+              for i in range(n_models)]
+    return graphs, SolutionFactory(graphs, num_processors=3, rng=random.Random(1))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 1000))
+def test_crossover_mutation_validity(seed):
+    graphs, fac = _factory()
+    fac.rng = random.Random(seed)
+    a, b = fac.random_solution(), fac.random_solution()
+    c1, c2 = fac.crossover(a, b)
+    for c in (c1, c2):
+        m = fac.mutate(c)
+        assert sorted(m.priority) == list(range(len(graphs)))
+        for net, g in enumerate(graphs):
+            assert len(m.partition[net]) == g.num_edges
+            assert all(bit in (0, 1) for bit in m.partition[net])
+            assert all(0 <= p < 3 for p in m.mapping[net])
+        # decoding never crashes and covers all layers
+        placed = decode_solution(m, graphs)
+        for net, plist in enumerate(placed):
+            layers = sorted(l for p in plist for l in p.subgraph.layer_ids)
+            assert layers == list(range(graphs[net].num_layers))
+
+
+def test_majority_vote_mapping():
+    g = chain_graph("m", [("conv", 1e6, 10, 100)] * 3)
+    sg = g.partition([0, 0])[0]
+    assert subgraph_processor(sg, [2, 2, 0]) == 2
+    assert subgraph_processor(sg, [0, 1, 2]) == 0  # tie -> smallest pid

@@ -1,0 +1,163 @@
+"""Profiler backends, Merkle caching, zoo models, Table 2/3/4 consistency."""
+import pytest
+
+from repro.core import (
+    AnalyticMobileBackend,
+    JaxExecBackend,
+    LaneRooflineBackend,
+    ProfileDB,
+    Profiler,
+    decode_solution,
+    fragmentation_penalty,
+    mobile_processors,
+    tpu_lanes,
+    whole_model_placement,
+    Solution,
+    TableBackend,
+)
+from repro.zoo import (
+    MODEL_NAMES,
+    TABLE4_RATIO,
+    all_cost_graphs,
+    executable_zoo,
+    make_cost_graph,
+    paper_profile_tables,
+)
+
+
+@pytest.fixture(scope="module")
+def procs():
+    return mobile_processors()
+
+
+@pytest.fixture(scope="module")
+def graphs():
+    return all_cost_graphs()
+
+
+def test_zoo_graphs_match_table6(graphs):
+    from repro.zoo.profiles import MODEL_SPECS
+    for name, g in graphs.items():
+        assert g.total_macs == pytest.approx(MODEL_SPECS[name]["macs"], rel=1e-6)
+        assert g.num_layers == MODEL_SPECS[name]["layers"]
+        assert g.validate_acyclic()
+
+
+def test_table_backend_whole_model_matches_paper(procs, graphs):
+    """Whole-model times on each processor == Table 3 (plus overhead)."""
+    from repro.zoo.profiles import best_processor_times_s
+    tables = paper_profile_tables()
+    backend = TableBackend(processors=procs, tables=tables)
+    best = best_processor_times_s()
+    for name in MODEL_NAMES:
+        g = graphs[name]
+        p = whole_model_placement(g, 0, processor=2, dtype_ix=1, backend_ix=0)
+        t = backend.measure(p) - procs[2].invocation_overhead
+        assert t == pytest.approx(best[name]["npu"], rel=0.05)
+
+
+def test_fragmentation_matches_table4_direction(procs, graphs):
+    """Σ(single-layer subgraphs) vs whole graph reproduces the sign and
+    rough magnitude of the paper's non-linearity ratios (Table 4)."""
+    tables = paper_profile_tables()
+    backend = TableBackend(processors=procs, tables=tables)
+    prof = Profiler(backend)
+    name = "mosaic"
+    g = graphs[name]
+    whole = prof.subgraph_time(whole_model_placement(g, 0, 2, 1, 0))
+    sol = Solution(
+        partition=[[1] * g.num_edges], mapping=[[2] * g.num_layers],
+        priority=[0], dtype=[1], backend=[0],
+    )
+    placed = decode_solution(sol, [g])[0]
+    summed = sum(prof.subgraph_time(p) for p in placed)
+    ratio = summed / whole
+    assert 1.3 < ratio < 4.5  # NPU: estimated overshoots measured (1.4-3.45)
+
+
+def test_profile_db_merkle_cache(procs, graphs):
+    tables = paper_profile_tables()
+    db = ProfileDB()
+    prof = Profiler(TableBackend(processors=procs, tables=tables), db)
+    p = whole_model_placement(graphs["yolov8n"], 0, 2, 1, 0)
+    t1 = prof.subgraph_time(p)
+    assert db.misses == 1
+    t2 = prof.subgraph_time(p)
+    assert t1 == t2
+    assert db.hits == 1
+
+
+def test_profile_db_persistence(tmp_path, procs, graphs):
+    path = str(tmp_path / "db.json")
+    db = ProfileDB(path)
+    prof = Profiler(TableBackend(processors=procs, tables=paper_profile_tables()), db)
+    p = whole_model_placement(graphs["yolov8n"], 0, 2, 1, 0)
+    t1 = prof.subgraph_time(p)
+    db.save()
+    db2 = ProfileDB(path)
+    prof2 = Profiler(TableBackend(processors=procs, tables=paper_profile_tables()), db2)
+    assert prof2.subgraph_time(p) == t1
+    assert db2.hits == 1 and db2.misses == 0
+
+
+def test_analytic_backend_unsupported_config_penalty(procs, graphs):
+    backend = AnalyticMobileBackend(procs)
+    # NPU has no fp32 kernels -> fallback penalty makes fp32 far slower
+    p16 = whole_model_placement(graphs["yolov8n"], 0, 2, 1, 0)
+    p32 = whole_model_placement(graphs["yolov8n"], 0, 2, 0, 0)
+    assert backend.measure(p32) > 5 * backend.measure(p16)
+
+
+def test_jax_exec_backend_device_in_the_loop():
+    """Literal device-in-the-loop: really runs a jitted subgraph on CPU."""
+    zoo = executable_zoo(names=["face_det"], channels=4, spatial=8)
+    backend = JaxExecBackend(zoo, repeats=2)
+    g = zoo["face_det"].graph
+    p = whole_model_placement(g, 0, 0, 0, 0)
+    t = backend.measure(p)
+    assert 0 < t < 5.0  # executed for real, in sane time
+
+
+def test_jax_exec_nonlinearity_is_real():
+    """Cutting a real jitted model changes measured time (XLA fusion loss +
+    per-call overhead) — the non-linearity of §2.1.2 observed live."""
+    zoo = executable_zoo(names=["selfie_seg"], channels=4, spatial=8)
+    backend = JaxExecBackend(zoo, repeats=3)
+    prof = Profiler(backend)
+    g = zoo["selfie_seg"].graph
+    whole = prof.subgraph_time(whole_model_placement(g, 0, 0, 0, 0))
+    sol = Solution(
+        partition=[[1] * g.num_edges], mapping=[[0] * g.num_layers],
+        priority=[0], dtype=[0], backend=[0],
+    )
+    placed = decode_solution(sol, [g])[0]
+    summed = sum(prof.subgraph_time(p) for p in placed)
+    assert summed != pytest.approx(whole, rel=0.05)
+
+
+def test_lane_roofline_backend_biggest_not_always_best():
+    lanes = tpu_lanes((128, 8))
+    backend = LaneRooflineBackend(lanes)
+    small = make_cost_graph("face_det")
+    big = make_cost_graph("fastsam_s")
+    t_small_big_lane = backend.measure(whole_model_placement(small, 0, 0, 1, 0))
+    t_small_small_lane = backend.measure(whole_model_placement(small, 0, 1, 1, 0))
+    # tiny model: big lane's efficiency collapse means the small lane wins
+    # or at least is competitive
+    assert t_small_small_lane < t_small_big_lane * 10
+    t_big_big = backend.measure(whole_model_placement(big, 0, 0, 1, 0))
+    t_big_small = backend.measure(whole_model_placement(big, 0, 1, 1, 0))
+    assert t_big_big < t_big_small  # big model wants the big lane
+
+
+def test_executable_zoo_branching_subgraph():
+    """add_merge layers with external skip inputs execute correctly."""
+    zoo = executable_zoo(names=["hand_det"], channels=4, spatial=8)
+    m = zoo["hand_det"]
+    skips = [l.index for l in m.graph.layers if l.op_type == "add_merge"]
+    assert skips, "hand_det should have merge layers"
+    # subgraph starting at a merge layer -> two external inputs
+    fn, args = m.build_subgraph_fn([skips[0]], "fp32")
+    out = fn(*args)
+    import numpy as np
+    assert not np.any(np.isnan(np.asarray(out)))

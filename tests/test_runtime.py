@@ -1,0 +1,152 @@
+"""Puzzle Runtime: coordinator/worker/engine behaviour + §5.3 optimizations."""
+import numpy as np
+import pytest
+
+from repro.core import Solution, mobile_processors
+from repro.runtime import (
+    PuzzleRuntime,
+    RuntimeConfig,
+    TensorPool,
+    SharedBufferTransport,
+    make_engine,
+)
+from repro.zoo import executable_zoo
+
+
+@pytest.fixture(scope="module")
+def zoo():
+    return executable_zoo(names=["face_det", "selfie_seg"], channels=4, spatial=8)
+
+
+def _solution(graphs, split_first=True):
+    g0, g1 = graphs
+    part0 = [0] * g0.num_edges
+    if split_first:
+        # cut the last chain edge: the final layers form a second subgraph
+        part0[g0.num_layers - 2] = 1
+    return Solution(
+        partition=[part0, [0] * g1.num_edges],
+        mapping=[[2] * (g0.num_layers - 1) + [1], [0] * g1.num_layers],
+        priority=[0, 1],
+        dtype=[0, 0],
+        backend=[0, 0],
+    )
+
+
+def test_end_to_end_inference(zoo):
+    graphs = [zoo["face_det"].graph, zoo["selfie_seg"].graph]
+    rt = PuzzleRuntime(graphs, _solution(graphs), mobile_processors(), zoo)
+    try:
+        st = rt.infer_sync([0, 1])
+        assert st.makespan is not None and st.makespan > 0
+        # face_det split into 2 subgraphs + selfie 1
+        assert len(st.task_records) == 3
+        out = st.outputs
+        assert all(not np.any(np.isnan(np.asarray(v, np.float32)))
+                   for v in out.values() if not isinstance(v, tuple))
+    finally:
+        rt.close()
+
+
+def test_cross_processor_dependency_order(zoo):
+    """Subgraph 2 (GPU) must consume subgraph 1's (NPU) output."""
+    graphs = [zoo["face_det"].graph]
+    g = graphs[0]
+    sol = Solution(
+        partition=[[1 if i == g.num_layers - 2 else 0 for i in range(g.num_edges)]],
+        mapping=[[2] * (g.num_layers - 1) + [1]],
+        priority=[0], dtype=[0], backend=[0],
+    )
+    rt = PuzzleRuntime(graphs, sol, mobile_processors(), zoo)
+    try:
+        st = rt.infer_sync([0])
+        recs = {r["sg"]: r for r in st.task_records}
+        assert set(recs) == {0, 1}
+    finally:
+        rt.close()
+
+
+def test_periodic_requests_all_complete(zoo):
+    graphs = [zoo["face_det"].graph, zoo["selfie_seg"].graph]
+    rt = PuzzleRuntime(graphs, _solution(graphs), mobile_processors(), zoo)
+    try:
+        res = rt.run_periodic([[0], [1]], [0.02, 0.03], num_requests=4)
+        assert len(res) == 2
+        for glist in res:
+            assert len(glist) == 4
+            for st in glist:
+                assert st.makespan is not None
+    finally:
+        rt.close()
+
+
+def test_tensor_pool_reuse():
+    pool = TensorPool(enabled=True)
+    a = pool.acquire((16, 16), np.float32)
+    pool.release(a)
+    b = pool.acquire((8, 8), np.float32)   # smaller fits the same chunk? no:
+    # different rounded size -> fresh alloc; same size -> reuse
+    pool.release(b)
+    c = pool.acquire((16, 16), np.float32)
+    assert pool.stats.reuses >= 1
+    assert pool.stats.mallocs <= 2
+    c[:] = 1.0  # usable memory
+
+
+def test_tensor_pool_disabled_always_allocates():
+    pool = TensorPool(enabled=False)
+    a = pool.acquire((16,), np.float32)
+    pool.release(a)
+    b = pool.acquire((16,), np.float32)
+    assert pool.stats.mallocs == 2
+    assert pool.stats.reuses == 0
+
+
+def test_shared_buffer_zero_copy():
+    pool = TensorPool()
+    t_zero = SharedBufferTransport(pool, zero_copy=True)
+    t_copy = SharedBufferTransport(pool, zero_copy=False)
+    src = np.ones((64,), np.float32)
+    out_zero = t_zero.transfer(src)
+    assert out_zero is src
+    out_copy = t_copy.transfer(src)
+    assert out_copy is not src
+    np.testing.assert_array_equal(np.asarray(out_copy), src)
+    assert t_copy.stats.staged_bytes == src.nbytes
+
+
+def test_engines_agree(zoo):
+    """All backends compute the same function (different kernel profiles)."""
+    from repro.core import whole_model_placement
+    g = zoo["face_det"].graph
+    placed = whole_model_placement(g, 0, 0, 0, 0)
+    outs = {}
+    for name in ("default", "xnnpack", "nnapi"):
+        eng = make_engine(name)
+        key = eng.load(placed, zoo)
+        outs[name] = np.asarray(eng.execute(key), np.float32)
+    np.testing.assert_allclose(outs["default"], outs["nnapi"], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(outs["default"], outs["xnnpack"], rtol=1e-2, atol=1e-3)
+
+
+def test_ablation_pool_reduces_mallocs(zoo):
+    """Table 5 direction: tensor pool cuts allocation counts."""
+    graphs = [zoo["face_det"].graph, zoo["selfie_seg"].graph]
+    sol = _solution(graphs)
+    sol = Solution(
+        partition=sol.partition, mapping=sol.mapping, priority=sol.priority,
+        dtype=[0, 1], backend=[0, 0],   # dtype boundary forces staging copies
+    )
+    counts = {}
+    for pool_on in (False, True):
+        rt = PuzzleRuntime(
+            graphs, sol, mobile_processors(), zoo,
+            RuntimeConfig(tensor_pool=pool_on, shared_buffer=False),
+        )
+        try:
+            for _ in range(6):
+                rt.infer_sync([0, 1])
+            counts[pool_on] = rt.stats()["pool"]["mallocs"]
+        finally:
+            rt.close()
+    assert counts[True] <= counts[False]

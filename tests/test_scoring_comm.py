@@ -1,0 +1,98 @@
+"""XRBench scoring + communication cost model."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    PAPER_COMM_MODEL,
+    PiecewiseLinearCommModel,
+    group_scores,
+    microbenchmark_host,
+    percentile,
+    qoe_score,
+    quantization_cost,
+    rt_score,
+    saturation_multiplier,
+    scenario_score,
+)
+from repro.core.comm import MIB
+
+
+def test_qoe():
+    assert qoe_score([1, 2, 3, 4], deadline=2.5) == 0.5
+    assert qoe_score([], 1.0) == 0.0
+
+
+def test_rt_score_limits():
+    assert rt_score(0.0, 1.0) > 0.999
+    assert rt_score(1.0, 1.0) == pytest.approx(0.5)
+    assert rt_score(10.0, 1.0) < 1e-6
+    assert rt_score(float("inf"), 1.0) == 0.0
+
+
+def test_rt_score_scale_invariance():
+    # deadline-normalized: same ratio -> same score at any time scale
+    assert rt_score(0.010, 0.020) == pytest.approx(rt_score(10.0, 20.0))
+
+
+def test_scenario_score_perfect_and_zero():
+    assert scenario_score([[0.1] * 5], [1.0]) > 0.995
+    assert scenario_score([[10.0] * 5], [1.0]) < 1e-4
+    # two groups, one perfect one failed -> 0.5-ish
+    s = scenario_score([[0.1] * 5, [10.0] * 5], [1.0, 1.0])
+    assert 0.45 < s < 0.55
+
+
+def test_percentile():
+    vals = list(range(1, 11))
+    assert percentile(vals, 0) == 1
+    assert percentile(vals, 100) == 10
+    assert percentile(vals, 50) == pytest.approx(5.5)
+    assert percentile(vals, 90) == pytest.approx(9.1)
+
+
+def test_saturation_multiplier_monotone_score():
+    # score saturates above alpha=2 exactly
+    res = saturation_multiplier(lambda a: 1.0 if a >= 2.0 else 0.5,
+                                alphas=[1.0, 1.5, 2.0, 2.5, 3.0])
+    assert res.alpha_star == 2.0
+
+
+def test_saturation_requires_staying_saturated():
+    # dips back below threshold -> earlier saturation doesn't count
+    scores = {1.0: 1.0, 1.5: 0.6, 2.0: 1.0, 2.5: 1.0}
+    res = saturation_multiplier(lambda a: scores[a], alphas=[1.0, 1.5, 2.0, 2.5])
+    assert res.alpha_star == 2.0
+
+
+def test_comm_piecewise_regions():
+    m = PAPER_COMM_MODEL
+    assert m.cost(0) == 0.0
+    small, large = m.rpc_overhead(1000), m.rpc_overhead(10 * MIB)
+    assert small < large
+    assert m.cost(MIB) >= m.transfer_time(MIB)
+
+
+def test_comm_fit_recovers_synthetic():
+    true = PiecewiseLinearCommModel(a_lo=1e-4, b_lo=1e-11, a_hi=2e-4, b_hi=3e-11)
+    sizes = [2**k for k in range(8, 26)]
+    samples = [(float(n), true.cost(n)) for n in sizes]
+    fit = PiecewiseLinearCommModel.fit(samples)
+    for n in (1e3, 1e5, 5e6, 5e7):
+        assert fit.cost(n) == pytest.approx(true.cost(n), rel=0.05)
+
+
+def test_microbenchmark_host_monotone():
+    samples = microbenchmark_host(sizes=(1 << 12, 1 << 18, 1 << 22), repeats=3)
+    assert len(samples) == 3
+    assert samples[-1][1] > samples[0][1]  # bigger copies take longer
+    fit = PiecewiseLinearCommModel.fit(samples)
+    assert fit.cost(1 << 20) > 0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(1.0, 1e9))
+def test_quantization_cost_positive_monotone(n):
+    assert quantization_cost(n) > 0
+    assert quantization_cost(2 * n) > quantization_cost(n)

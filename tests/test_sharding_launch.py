@@ -1,0 +1,127 @@
+"""Sharding rules, input specs, and the HLO static analyzer."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch.hlo_analysis import analyze, parse_module
+from repro.launch.shapes import INPUT_SHAPES, config_for_shape, input_specs
+from repro.sharding.rules import batch_spec, spec_for_shape
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # a virtual 16x16 mesh over abstract devices (no allocation)
+    import numpy as np
+    devs = np.array(jax.devices() * 256)[:256].reshape(16, 16)
+    return Mesh(devs, ("data", "model"))
+
+
+def test_spec_ffn_shards_model(mesh):
+    p = spec_for_shape(("embed", "ffn"), (4096, 27648), mesh)
+    assert p == P("data", "model")
+
+
+def test_spec_heads_divisible(mesh):
+    p = spec_for_shape(("embed", "heads", "head_dim"), (8192, 64, 128), mesh)
+    assert p == P("data", "model")
+
+
+def test_spec_heads_not_divisible_replicates(mesh):
+    # 40 heads % 16 != 0 -> heads AND head_dim stay unsharded (§Perf 2)
+    p = spec_for_shape(("embed", "heads", "head_dim"), (5120, 40, 128), mesh)
+    assert p == P("data")
+
+
+def test_spec_vocab_not_divisible(mesh):
+    p = spec_for_shape(("vocab", "embed"), (50280, 2048), mesh)
+    # 50280 % 16 != 0 -> vocab unsharded; embed takes data
+    assert p == P(None, "data")
+
+
+def test_spec_layers_never_sharded(mesh):
+    p = spec_for_shape(("layers", "experts", "embed", "ffn"),
+                       (61, 384, 7168, 2048), mesh)
+    assert p == P(None, "model", "data")
+
+
+def test_batch_spec(mesh):
+    assert batch_spec(mesh, 256) == P("data")
+    assert batch_spec(mesh, 1) == P(None)
+    assert batch_spec(mesh, 13) == P(None)
+
+
+def test_input_specs_shapes():
+    cfg = get_config("phi4-mini-3.8b")
+    tr = input_specs(cfg, INPUT_SHAPES["train_4k"])
+    assert tr["tokens"].shape == (256, 4096)
+    de = input_specs(cfg, INPUT_SHAPES["decode_32k"])
+    assert de["token"].shape == (128, 1)
+    # decode carries a cache pytree sized to seq_len
+    leaves = jax.tree.leaves(de["caches"])
+    assert any(l.shape[2] == 32768 for l in leaves if len(l.shape) == 5)
+
+
+def test_long_context_gets_sliding_window():
+    cfg = get_config("qwen3-14b")
+    assert cfg.sliding_window is None
+    adj = config_for_shape(cfg, INPUT_SHAPES["long_500k"])
+    assert adj.sliding_window == 8192
+    # SSM archs stay untouched (natively sub-quadratic)
+    ssm = get_config("mamba2-1.3b")
+    assert config_for_shape(ssm, INPUT_SHAPES["long_500k"]).sliding_window is None
+    # windowed decode cache is a ring buffer of window size
+    specs = input_specs(adj, INPUT_SHAPES["long_500k"])
+    kv = [l for l in jax.tree.leaves(specs["caches"]) if len(l.shape) == 5]
+    assert all(l.shape[2] == 8192 for l in kv)
+
+
+# -- HLO analyzer on a hand-written module ----------------------------------
+
+HLO_SAMPLE = """
+HloModule test
+
+%body.1 (p: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+  %p = (s32[], f32[128,256]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[128,256]{1,0} get-tuple-element(%p), index=1
+  %w = f32[256,256]{1,0} constant({...})
+  %d = f32[128,256]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[128,256]{1,0} all-reduce(%d), replica_groups={}
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[128,256]) tuple(%ni, %ar)
+}
+
+%cond.1 (p: (s32[], f32[128,256])) -> pred[] {
+  %p = (s32[], f32[128,256]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(8)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: f32[128,256]) -> f32[128,256] {
+  %a = f32[128,256]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[128,256]) tuple(%z, %a)
+  %w = (s32[], f32[128,256]) while(%t0), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"8"}}
+  ROOT %out = f32[128,256]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_hlo_analyzer_trip_count_multiplies():
+    stats = analyze(HLO_SAMPLE)
+    # dot: 2 * 128*256 * 256 flops, times trip count 8
+    assert stats.flops == pytest.approx(8 * 2 * 128 * 256 * 256)
+    # all-reduce operand: 128*256*4 bytes, times 8
+    assert stats.collective_bytes == pytest.approx(8 * 128 * 256 * 4)
+    assert stats.collective_by_op["all-reduce"] == pytest.approx(8 * 128 * 256 * 4)
+
+
+def test_hlo_parser_handles_tuple_params():
+    comps, entry = parse_module(HLO_SAMPLE)
+    assert entry == "main"
+    assert "body.1" in comps
+    assert any(i.opcode == "dot" for i in comps["body.1"].instrs)

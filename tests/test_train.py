@@ -1,0 +1,135 @@
+"""Training substrate: optimizers, data, checkpointing, end-to-end loss drop."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke_config
+from repro.train import (
+    DataConfig,
+    MarkovDataset,
+    TrainConfig,
+    adafactor,
+    adamw,
+    make_optimizer,
+    optimizer_for_config,
+    restore_checkpoint,
+    save_checkpoint,
+    train,
+)
+
+
+# -- optimizers -------------------------------------------------------------
+
+def _quadratic_params():
+    return {"w": jnp.array([3.0, -2.0, 1.0]), "b": jnp.array(5.0)}
+
+
+@pytest.mark.parametrize("opt_name", ["adamw", "adafactor"])
+def test_optimizer_minimizes_quadratic(opt_name):
+    init, update = make_optimizer(opt_name, lr=0.1)
+    params = _quadratic_params()
+    state = init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + p["b"] ** 2
+
+    for _ in range(200):
+        grads = jax.grad(loss)(params)
+        params, state = update(grads, state, params)
+    assert float(loss(params)) < 0.05
+
+
+def test_adamw_step_counts_and_shapes():
+    init, update = adamw()
+    params = {"a": jnp.ones((4, 8)), "b": jnp.zeros((3,))}
+    state = init(params)
+    grads = jax.tree.map(jnp.ones_like, params)
+    new_params, new_state = update(grads, state, params)
+    assert int(new_state.step) == 1
+    assert jax.tree.structure(new_params) == jax.tree.structure(params)
+    assert new_params["a"].shape == (4, 8)
+
+
+def test_adafactor_factored_state_is_small():
+    init, _ = adafactor()
+    params = {"w": jnp.ones((512, 256))}
+    state = init(params)
+    leaf = state.inner["w"]
+    assert "vr" in leaf and "vc" in leaf and "v" not in leaf
+    assert leaf["vr"].shape == (512,)
+    assert leaf["vc"].shape == (256,)
+    # factored state is ~2 orders smaller than the full second moment
+    assert leaf["vr"].size + leaf["vc"].size < 512 * 256 / 100
+
+
+def test_optimizer_for_config_picks_adafactor_for_1t():
+    from repro.configs import get_config
+    assert optimizer_for_config(get_config("kimi-k2-1t-a32b")) == "adafactor"
+    assert optimizer_for_config(get_config("phi4-mini-3.8b")) == "adamw"
+
+
+# -- data -----------------------------------------------------------------
+
+def test_markov_dataset_deterministic_and_shaped():
+    cfg = DataConfig(vocab_size=64, seq_len=16, batch_size=4, seed=3)
+    d1, d2 = MarkovDataset(cfg), MarkovDataset(cfg)
+    b1 = next(d1.batches())
+    b2 = next(d2.batches())
+    np.testing.assert_array_equal(b1[0], b2[0])
+    tokens, labels = b1
+    assert tokens.shape == (4, 16) and labels.shape == (4, 16)
+    np.testing.assert_array_equal(tokens[:, 1:], labels[:, :-1])  # shifted
+    assert 0 < d1.entropy() < np.log(64)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(8, 128), st.integers(0, 100))
+def test_markov_tokens_in_range(vocab, seed):
+    cfg = DataConfig(vocab_size=vocab, seq_len=8, batch_size=2, seed=seed)
+    tokens, labels = next(MarkovDataset(cfg).batches())
+    assert tokens.min() >= 0 and tokens.max() < vocab
+
+
+# -- checkpointing ------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    params = {"w": jnp.arange(12, dtype=jnp.bfloat16).reshape(3, 4),
+              "b": jnp.ones((2,), jnp.float32)}
+    opt = {"m": jax.tree.map(jnp.zeros_like, params)}
+    path = str(tmp_path / "ckpt.msgpack")
+    save_checkpoint(path, params, opt, step=42, meta={"note": "x"})
+    p2, o2, step, meta = restore_checkpoint(path, params, opt)
+    assert step == 42 and meta["note"] == "x"
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+# -- end-to-end: the model learns the chain ---------------------------------
+
+def test_training_reduces_loss():
+    cfg = get_smoke_config("phi4-mini-3.8b")
+    res = train(cfg, TrainConfig(steps=60, batch_size=8, seq_len=32,
+                                 lr=3e-3, log_every=0))
+    first = np.mean(res.losses[:5])
+    last = np.mean(res.losses[-5:])
+    assert last < first - 0.5, (first, last)
+    assert last > res.loss_floor - 0.05  # can't beat the entropy floor
+
+
+def test_training_checkpoint_resume(tmp_path):
+    cfg = get_smoke_config("mamba2-1.3b")
+    path = str(tmp_path / "ck.msgpack")
+    r1 = train(cfg, TrainConfig(steps=20, batch_size=4, seq_len=32, lr=1e-3,
+                                log_every=0, checkpoint_path=path,
+                                checkpoint_every=20))
+    assert os.path.exists(path)
+    r2 = train(cfg, TrainConfig(steps=30, batch_size=4, seq_len=32, lr=1e-3,
+                                log_every=0, checkpoint_path=path,
+                                checkpoint_every=100))
+    assert len(r2.losses) == 10  # resumed from step 20
