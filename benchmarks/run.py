@@ -10,6 +10,11 @@ Prints ``name,us_per_call,derived`` CSV rows. Sections:
             Mapping vs NPU Only (paper Fig. 12)
 * fig15   — multi-model-group saturation multipliers (paper Fig. 15)
 * table5  — runtime ablation: tensor pool / shared buffer (paper Table 5 / Fig. 10)
+* simspeed — fast-path evaluation engine: reference DES vs array-based
+             fastsim µs/eval, decode-cache effect, grid vs bisection α*,
+             and an end-to-end GA + saturation speedup on a deterministic
+             3-group scenario (with a makespan-parity check). ``--json``
+             additionally writes BENCH_simspeed.json for regression tracking.
 * roofline — per (arch × shape) roofline terms from the dry-run artifacts
              (EXPERIMENTS.md §Roofline)
 * kernels — Pallas kernel oracle agreement
@@ -22,6 +27,7 @@ from __future__ import annotations
 import argparse
 import glob
 import json
+import math
 import os
 import statistics
 import sys
@@ -228,6 +234,162 @@ def bench_table5(args) -> None:
              f"staged={stats['transport']['staged_copies']}")
 
 
+def bench_simspeed(args) -> None:
+    """Old-vs-new evaluation engine: parity, µs/eval, end-to-end speedup."""
+    groups = random_scenarios(
+        MODEL_NAMES, count=1, models_per_scenario=6, num_groups=3, seed=7,
+    )[0]
+    record: Dict[str, object] = {"scenario": [list(g) for g in groups]}
+
+    def make_analyzer(engine: str, saturation_mode: str) -> StaticAnalyzer:
+        graphs = all_cost_graphs()
+        procs, prof = _profiler()
+        scen = build_scenario("simspeed", groups, graphs)
+        # "reference" emulates the seed path end to end: generator-coroutine
+        # DES, per-simulation re-decode, pure-Python NSGA, 117-point α grid.
+        cfg = AnalyzerConfig(
+            engine=engine, saturation_mode=saturation_mode,
+            ga=GAConfig(pop_size=20, max_generations=30, min_generations=10,
+                        seed=0, vectorized_nsga=(engine == "fast")),
+        )
+        return StaticAnalyzer(scen, procs, prof, PAPER_COMM_MODEL, cfg)
+
+    an = make_analyzer("fast", "bisect")
+    an.factory.rng = __import__("random").Random(123)
+    sols = [an.factory.random_solution() for _ in range(12)]
+
+    # 1) parity: identical makespans on the deterministic scenario, clean
+    #    and measured (noisy + dispatch overhead) paths.
+    max_diff = 0.0
+    for measured in (False, True):
+        ref = an.simulate(sols[0], 1.0, 24, measured=measured, seed=5,
+                          engine="reference")
+        fast = an.simulate(sols[0], 1.0, 24, measured=measured, seed=5,
+                           engine="fast")
+        pairs = list(zip(ref.makespans(), fast.makespans()))
+        assert pairs, "no requests simulated"
+        # dropped requests are inf on both sides: inf == inf is agreement,
+        # not a nan-poisoned diff
+        diff = max(
+            0.0 if math.isinf(a) and math.isinf(b) else abs(a - b)
+            for a, b in pairs
+        )
+        max_diff = max(max_diff, diff)
+    emit("simspeed.parity", 0.0,
+         f"max_makespan_diff={max_diff:.3e};ok={max_diff == 0.0}")
+    record["parity_max_diff"] = max_diff
+
+    # 2) µs per objectives() evaluation across distinct solutions (cold
+    #    decode each time for both engines).
+    def time_evals(engine: str) -> float:
+        a = make_analyzer(engine, "bisect")
+        t0 = time.perf_counter()
+        for s in sols:
+            a.objectives(s, engine=engine)
+        return (time.perf_counter() - t0) / len(sols)
+
+    ref_us = time_evals("reference") * 1e6
+    fast_us = time_evals("fast") * 1e6
+    emit("simspeed.eval_reference", ref_us, "per objectives() call")
+    emit("simspeed.eval_fastsim", fast_us,
+         f"per objectives() call;speedup=x{ref_us / fast_us:.2f}")
+    record["eval_us_reference"] = ref_us
+    record["eval_us_fastsim"] = fast_us
+
+    # 3) per-α score cost for a fixed solution: the decode cache amortizes
+    #    decoding + cost annotation across the whole α sweep.
+    alphas = [round(0.5 + 0.25 * i, 4) for i in range(16)]
+    t0 = time.perf_counter()
+    for a_ in alphas:
+        an.score(sols[1], a_)
+    sweep_fast_us = (time.perf_counter() - t0) / len(alphas) * 1e6
+    an_ref = make_analyzer("reference", "grid")
+    t0 = time.perf_counter()
+    for a_ in alphas:
+        an_ref.score(sols[1], a_)
+    sweep_ref_us = (time.perf_counter() - t0) / len(alphas) * 1e6
+    emit("simspeed.score_per_alpha_reference", sweep_ref_us, "36-request sims")
+    emit("simspeed.score_per_alpha_fastsim", sweep_fast_us,
+         f"speedup=x{sweep_ref_us / sweep_fast_us:.2f}")
+    record["score_per_alpha_us_reference"] = sweep_ref_us
+    record["score_per_alpha_us_fastsim"] = sweep_fast_us
+
+    # 4) α*-search: 117-point grid vs bracket+bisect (both on fastsim).
+    #    The NPU-only baseline has a well-behaved finite α*.
+    sat_sol = an.npu_only()
+    t0 = time.perf_counter()
+    grid = an.saturation(sat_sol, mode="grid")
+    grid_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    bis = an.saturation(sat_sol, mode="bisect")
+    bis_s = time.perf_counter() - t0
+    emit("simspeed.alpha_star_grid", grid_s * 1e6,
+         f"alpha_star={grid.alpha_star};evals={len(grid.scores)}")
+    emit("simspeed.alpha_star_bisect", bis_s * 1e6,
+         f"alpha_star={bis.alpha_star};evals={len(bis.scores)};"
+         f"agrees={bis.alpha_star == grid.alpha_star}")
+    record["alpha_star_grid"] = grid.alpha_star
+    record["alpha_star_bisect"] = bis.alpha_star
+    record["alpha_star_evals_grid"] = len(grid.scores)
+    record["alpha_star_evals_bisect"] = len(bis.scores)
+
+    # 5) end-to-end: GA search + one saturation sweep, seed path (reference
+    #    DES, per-sim re-decode, pure-Python NSGA, 117-point grid scan) vs
+    #    fast path (fastsim + decode/objective caches + bisection). Wall
+    #    clock is min-of-N, interleaved, with the collector paused during
+    #    each timed leg (timeit-style hygiene, applied to both paths) to
+    #    damp scheduler/GC noise.
+    import gc
+
+    def end_to_end(engine: str, mode: str) -> Tuple[float, float, int]:
+        a = make_analyzer(engine, mode)
+        gc.collect()
+        gc.disable()
+        try:
+            t0 = time.perf_counter()
+            ga = a.run_ga()
+            sat = a.saturation(ga.pareto[0])
+            dt = time.perf_counter() - t0
+        finally:
+            gc.enable()
+        return dt, sat.alpha_star, ga.evaluations
+
+    old_s = new_s = float("inf")
+    for _ in range(2):  # interleave repeats so CPU-clock drift hits both paths
+        t, old_alpha, old_evals = end_to_end("reference", "grid")
+        old_s = min(old_s, t)
+        t, new_alpha, new_evals = end_to_end("fast", "bisect")
+        new_s = min(new_s, t)
+    emit("simspeed.e2e_seed_path", old_s * 1e6,
+         f"alpha_star={old_alpha};ga_evals={old_evals}")
+    emit("simspeed.e2e_fast_path", new_s * 1e6,
+         f"alpha_star={new_alpha};ga_evals={new_evals};"
+         f"speedup=x{old_s / new_s:.2f}")
+    record["e2e_seconds_seed_path"] = old_s
+    record["e2e_seconds_fast_path"] = new_s
+    record["e2e_speedup"] = old_s / new_s
+    record["e2e_alpha_star"] = {"seed_path": old_alpha, "fast_path": new_alpha}
+
+    if getattr(args, "json", False):
+        record["timestamp"] = time.time()
+
+        def _finite(v):
+            if isinstance(v, float) and not np.isfinite(v):
+                return None
+            if isinstance(v, dict):
+                return {k: _finite(x) for k, x in v.items()}
+            if isinstance(v, list):
+                return [_finite(x) for x in v]
+            return v
+
+        safe = {k: _finite(v) for k, v in record.items()}
+        out = os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_simspeed.json")
+        with open(os.path.abspath(out), "w") as f:
+            json.dump(safe, f, indent=2, sort_keys=True)
+        emit("simspeed.json", 0.0, os.path.abspath(out))
+
+
 def bench_roofline(args) -> None:
     """Roofline terms per (arch × shape) from the dry-run artifacts."""
     pat = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun",
@@ -286,6 +448,7 @@ SECTIONS = {
     "fig12": bench_fig12,
     "fig15": bench_fig15,
     "table5": bench_table5,
+    "simspeed": bench_simspeed,
     "roofline": bench_roofline,
     "kernels": bench_kernels,
 }
@@ -296,6 +459,8 @@ def main() -> None:
     ap.add_argument("--only", choices=sorted(SECTIONS), default=None)
     ap.add_argument("--full", action="store_true",
                     help="all 10 random scenarios per group setting")
+    ap.add_argument("--json", action="store_true",
+                    help="also write BENCH_simspeed.json (simspeed section)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     for name, fn in SECTIONS.items():

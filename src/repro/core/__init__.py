@@ -18,6 +18,7 @@ from .comm import (
     quantization_cost,
 )
 from .des import Environment, PriorityStore
+from .fastsim import FastSimSpec, FastSimulator, SpecBuilder, build_spec
 from .ga import GAConfig, GAResult, GeneticScheduler
 from .graph import Edge, Layer, ModelGraph, Subgraph, branching_graph, chain_graph
 from .nsga import crowding_distance, das_dennis, dominates, fast_non_dominated_sort, nsga3_select
@@ -46,8 +47,17 @@ from .scoring import (
     qoe_score,
     rt_score,
     saturation_multiplier,
+    saturation_multiplier_bisect,
     scenario_score,
 )
-from .simulator import NoiseModel, RequestRecord, RuntimeSimulator, SimResult, TaskRecord
+from .simulator import (
+    NoiseModel,
+    RequestRecord,
+    RuntimeSimulator,
+    SimResult,
+    TaskRecord,
+    derive_dependencies,
+    subgraph_task_costs,
+)
 
 __all__ = [k for k in dir() if not k.startswith("_")]

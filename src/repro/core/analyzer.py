@@ -12,17 +12,25 @@ evaluation entry points used by the experiments:
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from .baselines import best_mapping_solutions, npu_only_solution
 from .chromosome import Solution, SolutionFactory, decode_solution
 from .comm import PiecewiseLinearCommModel
+from .fastsim import FastSimSpec, FastSimulator, SpecBuilder, build_spec
 from .ga import GAConfig, GAResult, GeneticScheduler
 from .processors import Processor
 from .profiler import Profiler
 from .scenarios import Scenario, base_periods, best_model_times
-from .scoring import SaturationResult, percentile, saturation_multiplier, scenario_score
+from .scoring import (
+    SaturationResult,
+    percentile,
+    saturation_multiplier,
+    saturation_multiplier_bisect,
+    scenario_score,
+)
 from .simulator import NoiseModel, RuntimeSimulator, SimResult
 
 
@@ -40,6 +48,15 @@ class AnalyzerConfig:
     dispatch_overhead: float = 150e-6
     dispatch_pid: int = 0
     ga: GAConfig = field(default_factory=GAConfig)
+    # Evaluation engine: "fast" runs the array-based FastSimulator with a
+    # per-solution decode/cost cache; "reference" re-decodes and replays the
+    # generator-coroutine RuntimeSimulator (the oracle fastsim is verified
+    # against). Both produce bit-identical results.
+    engine: str = "fast"
+    decode_cache_size: int = 2048
+    # α*-search: "bisect" brackets-then-bisects the near-monotone score curve
+    # (~15 score() calls); "grid" is the paper-faithful 117-point linear scan.
+    saturation_mode: str = "bisect"
 
 
 class StaticAnalyzer:
@@ -61,8 +78,39 @@ class StaticAnalyzer:
         self.factory = SolutionFactory(
             scenario.graphs, num_processors=len(processors),
         )
+        # Decode + cost cache: a solution is decoded and cost-annotated once
+        # (FastSimSpec) and then re-simulated across all α values, request
+        # counts and noise seeds. LRU-bounded by cfg.decode_cache_size. The
+        # SpecBuilder additionally shares partition and exec-cost memos
+        # *across* solutions (GA populations overlap heavily).
+        self._spec_cache: "OrderedDict[Tuple, FastSimSpec]" = OrderedDict()
+        self._spec_builder = SpecBuilder(
+            scenario.graphs, processors, profiler, comm_model,
+            input_home_pid=self.cfg.input_home_pid,
+        )
+        self.spec_cache_hits = 0
+        self.spec_cache_misses = 0
+        # Objective memo keyed by spec *content* signature: chromosomes that
+        # decode to the same placed configuration share evaluation results.
+        self._objective_cache: "OrderedDict[Tuple, Tuple[float, ...]]" = OrderedDict()
+        self.objective_cache_hits = 0
 
     # -- simulation ------------------------------------------------------------
+    def solution_spec(self, solution: Solution) -> FastSimSpec:
+        """Decoded + cost-annotated static structure for ``solution``, cached."""
+        key = solution.key()
+        spec = self._spec_cache.get(key)
+        if spec is not None:
+            self.spec_cache_hits += 1
+            self._spec_cache.move_to_end(key)
+            return spec
+        self.spec_cache_misses += 1
+        spec = self._spec_builder.build(solution)
+        self._spec_cache[key] = spec
+        if len(self._spec_cache) > self.cfg.decode_cache_size:
+            self._spec_cache.popitem(last=False)
+        return spec
+
     def simulate(
         self,
         solution: Solution,
@@ -70,13 +118,28 @@ class StaticAnalyzer:
         num_requests: int,
         measured: bool = False,
         seed: int = 0,
+        engine: Optional[str] = None,
+        collect_tasks: bool = True,
     ) -> SimResult:
-        placed = decode_solution(solution, self.scenario.graphs)
+        engine = engine or self.cfg.engine
         periods = [alpha * p for p in self.base_periods]
         noise = None
         if measured:
             noise = NoiseModel(self.cfg.noise.sigma_by_kind, seed=seed)
-        sim = RuntimeSimulator(
+        dispatch_overhead = self.cfg.dispatch_overhead if measured else 0.0
+        if engine == "fast":
+            sim = FastSimulator(
+                self.solution_spec(solution),
+                groups=self.scenario.groups,
+                periods=periods,
+                num_requests=num_requests,
+                noise=noise,
+                dispatch_overhead=dispatch_overhead,
+                dispatch_pid=self.cfg.dispatch_pid,
+            )
+            return sim.run(collect_tasks=collect_tasks)
+        placed = decode_solution(solution, self.scenario.graphs)
+        ref = RuntimeSimulator(
             placed=placed,
             processors=self.processors,
             profiler=self.profiler,
@@ -86,10 +149,10 @@ class StaticAnalyzer:
             num_requests=num_requests,
             input_home_pid=self.cfg.input_home_pid,
             noise=noise,
-            dispatch_overhead=self.cfg.dispatch_overhead if measured else 0.0,
+            dispatch_overhead=dispatch_overhead,
             dispatch_pid=self.cfg.dispatch_pid,
         )
-        return sim.run()
+        return ref.run()
 
     def objectives(
         self,
@@ -97,17 +160,37 @@ class StaticAnalyzer:
         alpha: Optional[float] = None,
         num_requests: Optional[int] = None,
         measured: bool = False,
+        engine: Optional[str] = None,
     ) -> Tuple[float, ...]:
         alpha = alpha if alpha is not None else self.cfg.search_alpha
         num_requests = num_requests or self.cfg.fast_requests
-        res = self.simulate(solution, alpha, num_requests, measured=measured)
-        objs: List[float] = []
+        engine = engine or self.cfg.engine
+        key = None
+        if engine == "fast":
+            key = (self.solution_spec(solution).signature(), alpha,
+                   num_requests, measured)
+            hit = self._objective_cache.get(key)
+            if hit is not None:
+                self.objective_cache_hits += 1
+                return hit
+        res = self.simulate(
+            solution, alpha, num_requests, measured=measured, engine=engine,
+            collect_tasks=False,
+        )
         cap = 1e6  # finite stand-in for dropped requests so NSGA ordering works
-        for g in range(self.scenario.num_groups):
-            ms = [min(m, cap) for m in res.makespans(g)]
+        per_group: List[List[float]] = [[] for _ in range(self.scenario.num_groups)]
+        for r in res.requests:
+            per_group[r.group].append(min(r.makespan, cap))
+        objs: List[float] = []
+        for ms in per_group:
             objs.append(sum(ms) / len(ms))
             objs.append(percentile(ms, 90.0))
-        return tuple(objs)
+        out = tuple(objs)
+        if key is not None:
+            self._objective_cache[key] = out
+            if len(self._objective_cache) > 4 * self.cfg.decode_cache_size:
+                self._objective_cache.popitem(last=False)
+        return out
 
     def score(
         self,
@@ -120,14 +203,29 @@ class StaticAnalyzer:
         """XRBench score; by default under measured (noisy) conditions —
         saturation multipliers are an *on-device* metric in the paper."""
         num_requests = num_requests or self.cfg.accurate_requests
-        res = self.simulate(solution, alpha, num_requests, measured=measured, seed=seed)
-        per_group = [res.makespans(g) for g in range(self.scenario.num_groups)]
+        res = self.simulate(
+            solution, alpha, num_requests, measured=measured, seed=seed,
+            collect_tasks=False,
+        )
+        per_group: List[List[float]] = [[] for _ in range(self.scenario.num_groups)]
+        for r in res.requests:
+            per_group[r.group].append(r.makespan)
         deadlines = [alpha * p for p in self.base_periods]
         return scenario_score(per_group, deadlines)
 
-    def saturation(self, solution: Solution, alphas: Optional[Sequence[float]] = None
-                   ) -> SaturationResult:
-        return saturation_multiplier(lambda a: self.score(solution, a), alphas)
+    def saturation(
+        self,
+        solution: Solution,
+        alphas: Optional[Sequence[float]] = None,
+        mode: Optional[str] = None,
+    ) -> SaturationResult:
+        evaluate = lambda a: self.score(solution, a)
+        if alphas is not None:
+            return saturation_multiplier(evaluate, alphas)
+        mode = mode or self.cfg.saturation_mode
+        if mode == "grid":
+            return saturation_multiplier(evaluate)
+        return saturation_multiplier_bisect(evaluate)
 
     # -- search ------------------------------------------------------------
     def run_ga(self, seeds: Sequence[Solution] = ()) -> GAResult:
@@ -136,6 +234,13 @@ class StaticAnalyzer:
             evaluate_fast=lambda s: self.objectives(s, num_requests=self.cfg.fast_requests),
             evaluate_accurate=lambda s: self.objectives(
                 s, num_requests=self.cfg.accurate_requests, measured=True
+            ),
+            # RuntimeSimulator stays available as the reference oracle: with
+            # ga.oracle_interval > 0 the GA periodically re-evaluates its best
+            # candidate through the reference DES and records any drift
+            # (expected 0.0 — the engines are bit-identical).
+            evaluate_oracle=lambda s: self.objectives(
+                s, num_requests=self.cfg.fast_requests, engine="reference"
             ),
             config=self.cfg.ga,
         )

@@ -17,7 +17,6 @@ mutation for the rest.
 from __future__ import annotations
 
 import random
-from collections import Counter
 from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -52,22 +51,33 @@ class Solution:
         )
 
     def key(self) -> Tuple:
-        return (
-            tuple(tuple(p) for p in self.partition),
-            tuple(tuple(m) for m in self.mapping),
-            tuple(self.priority),
-            tuple(self.dtype),
-            tuple(self.backend),
-        )
+        """Hashable chromosome identity, memoized on first call.
+
+        The GA only mutates freshly-copied (never-yet-keyed) solutions, so
+        memoization is safe; ``copy()`` deliberately does not carry the
+        cache over. Do not mutate a solution after calling ``key()`` on it.
+        """
+        k = self.__dict__.get("_key_cache")
+        if k is None:
+            k = self.__dict__["_key_cache"] = (
+                tuple(tuple(p) for p in self.partition),
+                tuple(tuple(m) for m in self.mapping),
+                tuple(self.priority),
+                tuple(self.dtype),
+                tuple(self.backend),
+            )
+        return k
 
 
 def subgraph_processor(sg: Subgraph, layer_mapping: Sequence[int]) -> int:
     """Majority vote of the subgraph's layers' processor preferences (Fig. 7b)."""
-    votes = Counter(layer_mapping[i] for i in sg.layer_ids)
-    top = votes.most_common()
-    best_count = top[0][1]
+    votes: Dict[int, int] = {}
+    for i in sg.layer_ids:
+        p = layer_mapping[i]
+        votes[p] = votes.get(p, 0) + 1
+    best_count = max(votes.values())
     # Deterministic tie-break: smallest processor id among the winners.
-    return min(p for p, c in top if c == best_count)
+    return min(p for p, c in votes.items() if c == best_count)
 
 
 @dataclass(frozen=True)

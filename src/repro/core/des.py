@@ -12,6 +12,11 @@ implements the subset we need with matching semantics:
 
 Determinism: ties in time are broken by a monotonically increasing sequence
 number, so a given seed always produces the same trace.
+
+This engine backs the *reference* simulator (:class:`RuntimeSimulator`).
+The GA search hot path uses :mod:`repro.core.fastsim`, an array-based event
+loop with identical semantics but no Event/Process object churn; the two are
+kept in lock-step by the parity tests in ``tests/test_fastsim.py``.
 """
 from __future__ import annotations
 

@@ -34,6 +34,13 @@ class GAConfig:
     p_prio: float = 0.2
     p_cfg: float = 0.1
     seed: int = 0
+    # Every N generations, re-evaluate the population's best candidate through
+    # the reference oracle (RuntimeSimulator) and record the drift vs the fast
+    # engine. 0 disables the check.
+    oracle_interval: int = 0
+    # False selects the pure-Python NSGA reference implementations (the seed
+    # code path, kept for differential testing and seed-path benchmarking).
+    vectorized_nsga: bool = True
 
 
 @dataclass
@@ -42,6 +49,7 @@ class GAResult:
     history: List[float]           # average population score per generation
     generations: int
     evaluations: int
+    oracle_drift: List[Tuple[int, float]] = field(default_factory=list)
 
 
 def _dominates(a: Objective, b: Objective) -> bool:
@@ -55,10 +63,12 @@ class GeneticScheduler:
         evaluate_fast: EvalFn,
         evaluate_accurate: Optional[EvalFn] = None,
         config: Optional[GAConfig] = None,
+        evaluate_oracle: Optional[EvalFn] = None,
     ):
         self.factory = factory
         self.evaluate_fast = evaluate_fast
         self.evaluate_accurate = evaluate_accurate or evaluate_fast
+        self.evaluate_oracle = evaluate_oracle
         self.cfg = config or GAConfig()
         self.rng = random.Random(self.cfg.seed)
         self.evaluations = 0
@@ -128,6 +138,7 @@ class GeneticScheduler:
             s.fitness = self._eval(s)
 
         history: List[float] = []
+        oracle_drift: List[Tuple[int, float]] = []
         stale = 0
         best_avg = float("inf")
         gen = 0
@@ -154,15 +165,30 @@ class GeneticScheduler:
             # could enter the Pareto set, before the population update.
             combined = pop + offspring
             fits = [list(s.fitness) for s in combined]
-            front0 = fast_non_dominated_sort(fits)[0]
+            front0 = fast_non_dominated_sort(fits, vectorized=cfg.vectorized_nsga)[0]
             for ix in front0:
                 combined[ix].fitness = self._eval(combined[ix], accurate=True)
             fits = [list(s.fitness) for s in combined]
-            keep = nsga3_select(fits, cfg.pop_size, rng=self.rng)
+            keep = nsga3_select(fits, cfg.pop_size, rng=self.rng,
+                                vectorized=cfg.vectorized_nsga)
             pop = [combined[i] for i in keep]
 
             avg = sum(sum(s.fitness) for s in pop) / len(pop)
             history.append(avg)
+            if (
+                self.evaluate_oracle is not None
+                and cfg.oracle_interval > 0
+                and gen % cfg.oracle_interval == 0
+            ):
+                # reference-oracle spot check: the fast engine is exact, so
+                # any drift on the best candidate flags a parity regression.
+                best = min(pop, key=lambda s: sum(s.fitness))
+                ref = self.evaluate_oracle(best)
+                fast = self._eval(best)
+                drift = max(
+                    abs(a - b) for a, b in zip(ref, fast)
+                ) if ref and fast else 0.0
+                oracle_drift.append((gen, drift))
             if avg < best_avg - 1e-12:
                 best_avg = avg
                 stale = 0
@@ -172,7 +198,7 @@ class GeneticScheduler:
                 break
 
         fits = [list(s.fitness) for s in pop]
-        pareto_ix = fast_non_dominated_sort(fits)[0]
+        pareto_ix = fast_non_dominated_sort(fits, vectorized=cfg.vectorized_nsga)[0]
         # dedupe identical chromosomes
         seen = set()
         pareto: List[Solution] = []
@@ -182,5 +208,6 @@ class GeneticScheduler:
                 seen.add(k)
                 pareto.append(pop[i])
         return GAResult(
-            pareto=pareto, history=history, generations=gen, evaluations=self.evaluations
+            pareto=pareto, history=history, generations=gen,
+            evaluations=self.evaluations, oracle_drift=oracle_drift,
         )

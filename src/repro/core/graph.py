@@ -253,24 +253,45 @@ class Subgraph:
         folded in pairwise, so equal subgraphs across candidates/generations
         hit the same profile-DB row. ``extra`` lets callers mix in the
         execution configuration (processor, dtype, backend).
+
+        The root digest and per-``extra`` results are memoized on the
+        *instance* (content-addressed, so always valid). The search fast
+        path shares ``Subgraph`` objects across candidate solutions via its
+        partition cache, so repeated profile-key computation becomes a dict
+        hit there, while paths that re-decode per simulation (the reference
+        oracle, mirroring the original implementation) keep paying full
+        cost.
         """
-        level = [self.graph.layers[i].leaf_hash() for i in sorted(self.layer_ids)]
-        s = set(self.layer_ids)
-        edge_sig = ",".join(
-            f"{e.src}-{e.dst}" for e in self.graph.edges if e.src in s and e.dst in s
-        )
-        level.append(hashlib.sha256(edge_sig.encode()).digest())
-        while len(level) > 1:
-            nxt = []
-            for i in range(0, len(level) - 1, 2):
-                nxt.append(hashlib.sha256(level[i] + level[i + 1]).digest())
-            if len(level) % 2:
-                nxt.append(level[-1])
-            level = nxt
-        root = level[0]
+        d = self.__dict__  # frozen dataclass: memoize without __setattr__
+        memo = d.get("_merkle_memo")
+        if memo is None:
+            memo = d["_merkle_memo"] = {}
+        else:
+            hit = memo.get(extra)
+            if hit is not None:
+                return hit
+        root = d.get("_merkle_root")
+        if root is None:
+            level = [self.graph.layers[i].leaf_hash() for i in sorted(self.layer_ids)]
+            s = set(self.layer_ids)
+            edge_sig = ",".join(
+                f"{e.src}-{e.dst}" for e in self.graph.edges if e.src in s and e.dst in s
+            )
+            level.append(hashlib.sha256(edge_sig.encode()).digest())
+            while len(level) > 1:
+                nxt = []
+                for i in range(0, len(level) - 1, 2):
+                    nxt.append(hashlib.sha256(level[i] + level[i + 1]).digest())
+                if len(level) % 2:
+                    nxt.append(level[-1])
+                level = nxt
+            root = d["_merkle_root"] = level[0]
         if extra:
-            root = hashlib.sha256(root + str(extra).encode()).digest()
-        return root.hex()
+            out = hashlib.sha256(root + str(extra).encode()).digest().hex()
+        else:
+            out = root.hex()
+        memo[extra] = out
+        return out
 
 
 def chain_graph(

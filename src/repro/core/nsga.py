@@ -17,6 +17,8 @@ import random
 from itertools import combinations
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 
 def dominates(a: Sequence[float], b: Sequence[float]) -> bool:
     """True iff ``a`` Pareto-dominates ``b`` (minimization)."""
@@ -25,22 +27,42 @@ def dominates(a: Sequence[float], b: Sequence[float]) -> bool:
     return not_worse and strictly_better
 
 
-def fast_non_dominated_sort(fits: Sequence[Sequence[float]]) -> List[List[int]]:
-    """Return fronts (lists of indices), best front first."""
+def fast_non_dominated_sort(
+    fits: Sequence[Sequence[float]], vectorized: bool = True
+) -> List[List[int]]:
+    """Return fronts (lists of indices), best front first.
+
+    The O(M·N²) pairwise domination test is vectorized into one broadcasted
+    comparison — this runs on ``pop + offspring`` every GA generation, so it
+    is on the search hot path. Front peeling preserves the classic Deb
+    ordering (indices within a front ascend in discovery order).
+    ``vectorized=False`` selects the original pure-Python implementation,
+    kept as the reference oracle (differential-tested in the suite) and for
+    seed-path benchmarking.
+    """
     n = len(fits)
-    S: List[List[int]] = [[] for _ in range(n)]
-    dom_count = [0] * n
-    fronts: List[List[int]] = [[]]
-    for p in range(n):
-        for q in range(n):
-            if p == q:
-                continue
-            if dominates(fits[p], fits[q]):
-                S[p].append(q)
-            elif dominates(fits[q], fits[p]):
-                dom_count[p] += 1
-        if dom_count[p] == 0:
-            fronts[0].append(p)
+    if n == 0:
+        return []
+    if vectorized:
+        F = np.asarray(fits, dtype=np.float64)
+        # dom[p, q] = fits[p] dominates fits[q]
+        le = np.all(F[:, None, :] <= F[None, :, :], axis=2)
+        lt = np.any(F[:, None, :] < F[None, :, :], axis=2)
+        dom = le & lt
+        dom_count = dom.sum(axis=0).tolist()   # times each q is dominated
+        S: List[List[int]] = [np.flatnonzero(row).tolist() for row in dom]
+    else:
+        S = [[] for _ in range(n)]
+        dom_count = [0] * n
+        for p in range(n):
+            for q in range(n):
+                if p == q:
+                    continue
+                if dominates(fits[p], fits[q]):
+                    S[p].append(q)
+                elif dominates(fits[q], fits[p]):
+                    dom_count[p] += 1
+    fronts: List[List[int]] = [[p for p in range(n) if dom_count[p] == 0]]
     i = 0
     while fronts[i]:
         nxt: List[int] = []
@@ -70,27 +92,23 @@ def das_dennis(n_obj: int, divisions: int) -> List[Tuple[float, ...]]:
     return pts
 
 
-def _normalize(fits: List[Sequence[float]]) -> List[List[float]]:
-    """Ideal-point translation + intercept normalization (NSGA-III §IV-C)."""
+def _normalize_py(fits: List[Sequence[float]]) -> List[List[float]]:
+    """Pure-Python reference for :func:`_normalize` (seed implementation)."""
     n_obj = len(fits[0])
     ideal = [min(f[k] for f in fits) for k in range(n_obj)]
     translated = [[f[k] - ideal[k] for k in range(n_obj)] for f in fits]
-    # extreme points via achievement scalarizing function
     intercepts = []
     for k in range(n_obj):
         weights = [1e-6] * n_obj
         weights[k] = 1.0
         ext = min(translated, key=lambda t: max(t[j] / weights[j] for j in range(n_obj)))
         intercepts.append(max(ext[k], 1e-12))
-    # Gaussian-elimination-based hyperplane intercepts are ideal; extreme-point
-    # axis values are a robust fallback that behaves identically for the 2-3
-    # objective cases used here and cannot produce degenerate planes.
     return [[t[k] / intercepts[k] for k in range(n_obj)] for t in translated]
 
 
-def _associate(norm: List[List[float]], refs: List[Tuple[float, ...]]
-               ) -> Tuple[List[int], List[float]]:
-    """Associate each point with its closest reference line."""
+def _associate_py(norm: List[List[float]], refs: List[Tuple[float, ...]]
+                  ) -> Tuple[List[int], List[float]]:
+    """Pure-Python reference for :func:`_associate` (seed implementation)."""
     assoc, dist = [], []
     for p in norm:
         best_r, best_d = 0, float("inf")
@@ -105,18 +123,58 @@ def _associate(norm: List[List[float]], refs: List[Tuple[float, ...]]
     return assoc, dist
 
 
+def _normalize(fits: List[Sequence[float]]) -> List[List[float]]:
+    """Ideal-point translation + intercept normalization (NSGA-III §IV-C)."""
+    F = np.asarray(fits, dtype=np.float64)
+    translated = F - F.min(axis=0)
+    # extreme points via achievement scalarizing function
+    n_obj = F.shape[1]
+    weights = np.full((n_obj, n_obj), 1e-6)
+    np.fill_diagonal(weights, 1.0)
+    # asf[k, i] = max_j translated[i, j] / weights[k, j]
+    asf = (translated[None, :, :] / weights[:, None, :]).max(axis=2)
+    ext = translated[asf.argmin(axis=1)]            # (n_obj, n_obj)
+    intercepts = np.maximum(np.diagonal(ext), 1e-12)
+    # Gaussian-elimination-based hyperplane intercepts are ideal; extreme-point
+    # axis values are a robust fallback that behaves identically for the 2-3
+    # objective cases used here and cannot produce degenerate planes.
+    return (translated / intercepts).tolist()
+
+
+def _associate(norm: List[List[float]], refs: List[Tuple[float, ...]]
+               ) -> Tuple[List[int], List[float]]:
+    """Associate each point with its closest reference line (vectorized).
+
+    Perpendicular distance² to the line through a unit reference ``u`` is
+    ``|p|² − (p·u)²``; runs on every niching call, so it is broadcast over
+    all (point, reference) pairs at once.
+    """
+    P = np.asarray(norm, dtype=np.float64)
+    R = np.asarray(refs, dtype=np.float64)
+    rn = np.sqrt((R * R).sum(axis=1))
+    rn[rn == 0.0] = 1.0
+    U = R / rn[:, None]
+    dot = P @ U.T                                   # (n_points, n_refs)
+    d2 = (P * P).sum(axis=1)[:, None] - dot * dot
+    np.maximum(d2, 0.0, out=d2)                     # clamp fp cancellation
+    assoc = d2.argmin(axis=1)
+    dist = np.sqrt(d2[np.arange(len(norm)), assoc])
+    return assoc.tolist(), dist.tolist()
+
+
 def nsga3_select(
     fits: Sequence[Sequence[float]],
     k: int,
     rng: Optional[random.Random] = None,
     divisions: Optional[int] = None,
+    vectorized: bool = True,
 ) -> List[int]:
     """Select ``k`` indices from ``fits`` by NSGA-III environmental selection."""
     rng = rng or random.Random(0)
     if k >= len(fits):
         return list(range(len(fits)))
     n_obj = len(fits[0])
-    fronts = fast_non_dominated_sort(fits)
+    fronts = fast_non_dominated_sort(fits, vectorized=vectorized)
     chosen: List[int] = []
     last_front: List[int] = []
     for front in fronts:
@@ -133,8 +191,12 @@ def nsga3_select(
     refs = das_dennis(n_obj, divisions)
     pool = chosen + last_front
     fits_pool = [fits[i] for i in pool]
-    norm = _normalize(list(fits_pool))
-    assoc, dist = _associate(norm, refs)
+    if vectorized:
+        norm = _normalize(list(fits_pool))
+        assoc, dist = _associate(norm, refs)
+    else:
+        norm = _normalize_py(list(fits_pool))
+        assoc, dist = _associate_py(norm, refs)
     niche_count: Dict[int, int] = {}
     for j in range(len(chosen)):
         niche_count[assoc[j]] = niche_count.get(assoc[j], 0) + 1

@@ -23,6 +23,86 @@ from .processors import Processor
 from .profiler import Profiler
 
 
+def derive_dependencies(
+    placed: Sequence[Sequence[PlacedSubgraph]],
+) -> Tuple[List[List[List[int]]], List[List[List[int]]], List[Dict[int, int]]]:
+    """Static per-network dependency structure over subgraphs.
+
+    Returns ``(deps, succs, owner)`` where ``deps[net][k]`` lists producer
+    subgraph ids of subgraph ``k``, ``succs`` is the reverse relation, and
+    ``owner[net]`` maps layer id -> owning subgraph index. Shared by the
+    reference DES (:class:`RuntimeSimulator`) and the fast array engine
+    (:mod:`repro.core.fastsim`) so both see identical structure.
+    """
+    all_deps: List[List[List[int]]] = []
+    all_succs: List[List[List[int]]] = []
+    owners: List[Dict[int, int]] = []
+    for net_placed in placed:
+        owner: Dict[int, int] = {}
+        for k, p in enumerate(net_placed):
+            for lid in p.subgraph.layer_ids:
+                owner[lid] = k
+        deps: List[List[int]] = [[] for _ in net_placed]
+        succs: List[List[int]] = [[] for _ in net_placed]
+        for k, p in enumerate(net_placed):
+            prods = sorted({owner[e.src] for e in p.subgraph.in_cut_edges()})
+            deps[k] = prods
+            for pr in prods:
+                succs[pr].append(k)
+        all_deps.append(deps)
+        all_succs.append(succs)
+        owners.append(owner)
+    return all_deps, all_succs, owners
+
+
+def subgraph_task_costs(
+    placed: Sequence[Sequence[PlacedSubgraph]],
+    net: int,
+    k: int,
+    owner: Dict[int, int],
+    has_deps: bool,
+    profiler: Profiler,
+    comm_model: PiecewiseLinearCommModel,
+    input_home_pid: int,
+    exec_cache: Optional[Dict] = None,
+    exec_key: Optional[Tuple] = None,
+    in_cut: Optional[Sequence] = None,
+) -> Tuple[float, float, float]:
+    """(comm, quant, exec) seconds for subgraph ``k`` of network ``net``.
+
+    Float operations happen in a fixed order so the reference and fast
+    engines compute bit-identical costs. ``exec_cache``/``exec_key`` let the
+    fast path memoize the profiler lookup (Merkle hashing dominates it) and
+    ``in_cut`` lets it supply the subgraph's precomputed boundary edges; the
+    profiler is deterministic per key and the edge list is a pure function
+    of the subgraph, so cached values are identical.
+    """
+    p = placed[net][k]
+    comm = 0.0
+    quant = 0.0
+    if in_cut is None:
+        in_cut = p.subgraph.in_cut_edges()
+    for e in in_cut:
+        prod = placed[net][owner[e.src]]
+        if prod.processor != p.processor:
+            comm += comm_model.cost(e.bytes_)
+        if prod.dtype != p.dtype:
+            quant += quantization_cost(e.bytes_, comm_model.bandwidth)
+    if not has_deps:
+        # model input arrives at the input home processor
+        in_bytes = p.subgraph.input_bytes()
+        if p.processor != input_home_pid:
+            comm += comm_model.cost(in_bytes)
+    if exec_cache is not None:
+        exec_t = exec_cache.get(exec_key)
+        if exec_t is None:
+            exec_t = profiler.subgraph_time(p)
+            exec_cache[exec_key] = exec_t
+    else:
+        exec_t = profiler.subgraph_time(p)
+    return comm, quant, exec_t
+
+
 @dataclass(frozen=True)
 class NoiseModel:
     """Execution-time fluctuation per processor kind (§6.3).
@@ -136,51 +216,21 @@ class RuntimeSimulator:
         # processor's worker time.
         self.dispatch_overhead = dispatch_overhead
         self.dispatch_pid = dispatch_pid
-        # Static per-network dependency structure over subgraphs.
-        self._deps: List[List[List[int]]] = []   # net -> sg -> producer sg ids
-        self._succs: List[List[List[int]]] = []
-        self._producer_of_layer: List[Dict[int, int]] = []
-        for net_placed in placed:
-            owner: Dict[int, int] = {}
-            for k, p in enumerate(net_placed):
-                for lid in p.subgraph.layer_ids:
-                    owner[lid] = k
-            deps: List[List[int]] = [[] for _ in net_placed]
-            succs: List[List[int]] = [[] for _ in net_placed]
-            for k, p in enumerate(net_placed):
-                prods = sorted({owner[e.src] for e in p.subgraph.in_cut_edges()})
-                deps[k] = prods
-                for pr in prods:
-                    succs[pr].append(k)
-            self._deps.append(deps)
-            self._succs.append(succs)
-            self._producer_of_layer.append(owner)
+        # Static per-network dependency structure over subgraphs (shared with
+        # the fast array engine so both see identical structure).
+        self._deps, self._succs, self._producer_of_layer = derive_dependencies(placed)
         # Task costs are request-independent: precompute once per solution.
         self._costs: List[List[Tuple[float, float, float]]] = [
-            [self._task_costs(net, k) for k in range(len(net_placed))]
+            [
+                subgraph_task_costs(
+                    placed, net, k, self._producer_of_layer[net],
+                    bool(self._deps[net][k]), profiler, comm_model,
+                    input_home_pid,
+                )
+                for k in range(len(net_placed))
+            ]
             for net, net_placed in enumerate(placed)
         ]
-
-    # -- cost helpers ---------------------------------------------------------
-    def _task_costs(self, net: int, k: int) -> Tuple[float, float, float]:
-        """(comm, quant, exec) seconds for subgraph k of network net."""
-        p = self.placed[net][k]
-        comm = 0.0
-        quant = 0.0
-        owner = self._producer_of_layer[net]
-        for e in p.subgraph.in_cut_edges():
-            prod = self.placed[net][owner[e.src]]
-            if prod.processor != p.processor:
-                comm += self.comm.cost(e.bytes_)
-            if prod.dtype != p.dtype:
-                quant += quantization_cost(e.bytes_, self.comm.bandwidth)
-        if not self._deps[net][k]:
-            # model input arrives at the input home processor
-            in_bytes = p.subgraph.input_bytes()
-            if p.processor != self.input_home_pid:
-                comm += self.comm.cost(in_bytes)
-        exec_t = self.profiler.subgraph_time(p)
-        return comm, quant, exec_t
 
     # -- simulation -----------------------------------------------------------
     def run(self) -> SimResult:

@@ -1,0 +1,9 @@
+"""JAX version-compat shims for Pallas-TPU.
+
+Pallas-TPU renamed ``TPUCompilerParams`` to ``CompilerParams`` across JAX
+releases; resolve whichever this installation provides so the kernels work
+on either side of the rename.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
+
 
 def _quant_kernel(x_ref, q_ref, scale_ref):
     x = x_ref[...].astype(jnp.float32)                  # (rows, cols)
@@ -51,7 +53,7 @@ def quantize_int8(
             jax.ShapeDtypeStruct((nr * block_rows, c), jnp.int8),
             jax.ShapeDtypeStruct((nr * block_rows,), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)
         ),
         interpret=interpret,

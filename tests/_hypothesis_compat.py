@@ -1,0 +1,106 @@
+"""Use hypothesis when installed; otherwise a minimal deterministic fallback.
+
+The offline CI image does not ship ``hypothesis``, which used to hard-error
+test collection for every module importing it. This shim keeps the property
+tests running either way: with hypothesis installed you get real shrinking
+and edge-case generation; without it, each ``@given`` test runs a fixed
+number of seeded-random examples (deterministic across runs, no shrinking).
+
+Only the surface the test-suite uses is implemented: ``st.integers``,
+``st.floats``, ``st.lists``, ``st.tuples``, ``st.data``, ``st.composite``,
+``@settings(max_examples=..., deadline=...)``.
+"""
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+    import zlib
+
+    _FALLBACK_CAP = 30  # keep offline runs quick; hypothesis explores deeper
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def do_draw(self, rng):
+            return self._draw(rng)
+
+    class _DataObject:
+        """Stand-in for ``st.data()`` draws inside the test body."""
+
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy, label=None):
+            return strategy.do_draw(self._rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=None):
+            def draw(r):
+                hi = max_size if max_size is not None else min_size + 10
+                k = r.randint(min_size, hi)
+                return [elements.do_draw(r) for _ in range(k)]
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*elems):
+            return _Strategy(lambda r: tuple(e.do_draw(r) for e in elems))
+
+        @staticmethod
+        def data():
+            return _Strategy(_DataObject)
+
+        @staticmethod
+        def composite(fn):
+            def make(*args, **kwargs):
+                return _Strategy(
+                    lambda r: fn(lambda s: s.do_draw(r), *args, **kwargs)
+                )
+
+            return make
+
+    st = _Strategies()
+
+    def settings(max_examples=20, deadline=None, **_kw):
+        def deco(fn):
+            fn._fallback_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            base = zlib.crc32(fn.__qualname__.encode())
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = min(getattr(wrapper, "_fallback_max_examples", 20),
+                        _FALLBACK_CAP)
+                for example in range(n):
+                    rng = random.Random(base * 1000003 + example)
+                    vals = tuple(s.do_draw(rng) for s in strategies)
+                    fn(*args, *vals, **kwargs)
+
+            # hide the generated parameters from pytest's fixture resolution
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+
+        return deco

@@ -1,0 +1,278 @@
+"""Fast-path evaluation engine: fastsim parity, decode cache, bisection α*."""
+import math
+import random
+
+import pytest
+
+from repro.core import (
+    AnalyzerConfig,
+    FastSimulator,
+    NoiseModel,
+    PAPER_COMM_MODEL,
+    Profiler,
+    RuntimeSimulator,
+    SolutionFactory,
+    StaticAnalyzer,
+    branching_graph,
+    build_scenario,
+    build_spec,
+    chain_graph,
+    decode_solution,
+    mobile_processors,
+    saturation_multiplier,
+    saturation_multiplier_bisect,
+)
+from repro.core.profiler import AnalyticMobileBackend
+
+
+def _problem():
+    """Deterministic multi-group scenario: 4 nets (chains + diamonds), 2 groups."""
+    nets = [
+        chain_graph("a", [("conv", 4e6, 1000, 4000)] * 5),
+        branching_graph(
+            "b", [("conv", 2e6, 800, 2000)] * 4,
+            [(0, 1), (0, 2), (1, 3), (2, 3)],
+        ),
+        chain_graph("c", [("fc", 8e6, 2000, 8000)] * 3),
+        branching_graph(
+            "d", [("conv", 3e6, 500, 1500)] * 5,
+            [(0, 1), (0, 2), (1, 3), (2, 3), (3, 4)],
+        ),
+    ]
+    procs = mobile_processors()
+    prof = Profiler(AnalyticMobileBackend(procs))
+    groups = [[0, 1], [2, 3]]
+    periods = [0.004, 0.006]
+    return nets, procs, prof, groups, periods
+
+
+def _solutions(nets, num_processors, count=6, seed=11):
+    fac = SolutionFactory(nets, num_processors=num_processors,
+                          rng=random.Random(seed), cut_prob=0.35)
+    return [fac.random_solution() for _ in range(count)]
+
+
+def _run_pair(sol, nets, procs, prof, groups, periods, **kw):
+    placed = decode_solution(sol, nets)
+    ref = RuntimeSimulator(
+        placed=placed, processors=procs, profiler=prof,
+        comm_model=PAPER_COMM_MODEL, groups=groups, periods=periods, **kw,
+    ).run()
+    fast = FastSimulator.from_placed(
+        placed, procs, prof, PAPER_COMM_MODEL, groups, periods,
+        input_home_pid=kw.get("input_home_pid", 0),
+        num_requests=kw.get("num_requests", 20),
+        overlap_comm=kw.get("overlap_comm", False),
+        noise=kw.get("noise"),
+        dispatch_overhead=kw.get("dispatch_overhead", 0.0),
+        dispatch_pid=kw.get("dispatch_pid", 0),
+    ).run()
+    return ref, fast
+
+
+def _assert_identical(ref, fast):
+    # requests: same order, bit-identical record fields and makespans
+    assert len(ref.requests) == len(fast.requests)
+    for a, b in zip(ref.requests, fast.requests):
+        assert (a.group, a.request) == (b.group, b.request)
+        assert a.arrival == b.arrival
+        assert a.first_start == b.first_start
+        assert a.last_finish == b.last_finish
+        assert a.done_tasks == b.done_tasks
+        assert a.total_tasks == b.total_tasks
+        assert a.makespan == b.makespan or (
+            math.isinf(a.makespan) and math.isinf(b.makespan)
+        )
+    # tasks: same release/start/finish trace, same costs, same placement
+    assert len(ref.tasks) == len(fast.tasks)
+    for a, b in zip(ref.tasks, fast.tasks):
+        assert (a.group, a.request, a.network, a.sg_index, a.processor) == (
+            b.group, b.request, b.network, b.sg_index, b.processor
+        )
+        assert a.released == b.released
+        assert a.started == b.started
+        assert a.finished == b.finished
+        assert a.comm_time == b.comm_time
+        assert a.quant_time == b.quant_time
+        assert a.exec_time == b.exec_time
+    assert ref.busy_time == fast.busy_time
+    assert ref.horizon == fast.horizon
+
+
+def test_parity_clean():
+    nets, procs, prof, groups, periods = _problem()
+    for sol in _solutions(nets, len(procs)):
+        ref, fast = _run_pair(sol, nets, procs, prof, groups, periods,
+                              num_requests=10)
+        _assert_identical(ref, fast)
+
+
+def test_parity_noise_and_dispatch():
+    nets, procs, prof, groups, periods = _problem()
+    for seed, sol in enumerate(_solutions(nets, len(procs), count=4, seed=23)):
+        ref, fast = _run_pair(
+            sol, nets, procs, prof, groups, periods,
+            num_requests=8, noise=NoiseModel(seed=seed),
+            dispatch_overhead=150e-6, dispatch_pid=0,
+        )
+        _assert_identical(ref, fast)
+
+
+def test_parity_overlap_comm_and_input_home():
+    nets, procs, prof, groups, periods = _problem()
+    sol = _solutions(nets, len(procs), count=1, seed=5)[0]
+    ref, fast = _run_pair(sol, nets, procs, prof, groups, periods,
+                          num_requests=6, overlap_comm=True, input_home_pid=2)
+    _assert_identical(ref, fast)
+
+
+def test_parity_overloaded_dropped_requests():
+    # tight periods force unfinished requests at the horizon (inf makespans)
+    nets, procs, prof, groups, _ = _problem()
+    sol = _solutions(nets, len(procs), count=1, seed=9)[0]
+    ref, fast = _run_pair(sol, nets, procs, prof, groups, [1e-4, 1e-4],
+                          num_requests=400)
+    assert any(math.isinf(m) for m in ref.makespans())
+    _assert_identical(ref, fast)
+
+
+def test_collect_tasks_off_keeps_request_results():
+    nets, procs, prof, groups, periods = _problem()
+    sol = _solutions(nets, len(procs), count=1)[0]
+    placed = decode_solution(sol, nets)
+    spec = build_spec(placed, procs, prof, PAPER_COMM_MODEL)
+    kw = dict(groups=groups, periods=periods, num_requests=6,
+              noise=NoiseModel(seed=3), dispatch_overhead=150e-6)
+    with_tasks = FastSimulator(spec, **kw).run(collect_tasks=True)
+    without = FastSimulator(spec, **kw).run(collect_tasks=False)
+    assert without.tasks == []
+    assert with_tasks.makespans() == without.makespans()
+    assert with_tasks.busy_time == without.busy_time
+
+
+# -- analyzer integration ----------------------------------------------------
+
+def _analyzer(engine="fast", **cfg_kw):
+    nets, procs, prof, groups, _ = _problem()
+    scen = build_scenario(
+        "fastsim-test",
+        [["a", "b"], ["c", "d"]],
+        {g.name: g for g in nets},
+    )
+    cfg = AnalyzerConfig(engine=engine, **cfg_kw)
+    return StaticAnalyzer(scen, procs, prof, PAPER_COMM_MODEL, cfg)
+
+
+def test_analyzer_engines_agree():
+    an = _analyzer()
+    sol = an.factory.random_solution()
+    for measured in (False, True):
+        fast = an.simulate(sol, 1.0, 8, measured=measured, seed=2, engine="fast")
+        ref = an.simulate(sol, 1.0, 8, measured=measured, seed=2,
+                          engine="reference")
+        assert fast.makespans() == ref.makespans()
+        assert an.objectives(sol, engine="fast") == an.objectives(
+            sol, engine="reference")
+
+
+def test_decode_cache_reused_across_alpha_and_seed():
+    an = _analyzer()
+    sol = an.factory.random_solution()
+    an.simulate(sol, 1.0, 6)
+    assert an.spec_cache_misses == 1
+    an.simulate(sol, 2.0, 6)
+    an.simulate(sol, 2.0, 12, measured=True, seed=7)
+    assert an.spec_cache_misses == 1
+    assert an.spec_cache_hits == 2
+    other = an.factory.random_solution()
+    an.simulate(other, 1.0, 6)
+    assert an.spec_cache_misses == 2
+
+
+def test_decode_cache_lru_bound():
+    an = _analyzer(decode_cache_size=2)
+    sols = [an.factory.random_solution() for _ in range(4)]
+    for s in sols:
+        an.simulate(s, 1.0, 4)
+    assert len(an._spec_cache) == 2
+
+
+# -- bisection α*-search -----------------------------------------------------
+
+def _grid_vs_bisect(evaluate):
+    grid = saturation_multiplier(evaluate)
+    bis = saturation_multiplier_bisect(evaluate)
+    return grid, bis
+
+
+def test_bisect_matches_grid_monotone():
+    for mid in (0.3, 1.17, 2.5, 5.95):
+        def evaluate(a, _mid=mid):
+            return 1.0 / (1.0 + math.exp(-40.0 * (a - _mid)))
+
+        grid, bis = _grid_vs_bisect(evaluate)
+        assert bis.alpha_star == grid.alpha_star
+        # grid scans 117 points; bisection needs only a handful
+        assert len(bis.scores) <= 20
+
+
+def test_bisect_never_saturates():
+    grid, bis = _grid_vs_bisect(lambda a: 0.5)
+    assert math.isinf(grid.alpha_star) and math.isinf(bis.alpha_star)
+    assert len(bis.scores) == 1  # one probe at the top of the range
+
+
+def test_bisect_confirmation_catches_dip():
+    # saturated from 1.0 except a contention dip at [1.05, 1.1]: the "stays
+    # saturated" semantics means α* must land above the dip, like the grid.
+    def evaluate(a):
+        if a < 1.0:
+            return 0.2
+        if 1.05 <= a <= 1.1:
+            return 0.9
+        return 1.0
+
+    grid, bis = _grid_vs_bisect(evaluate)
+    assert grid.alpha_star == bis.alpha_star == 1.15
+
+
+def test_bisect_on_analyzer_matches_grid():
+    an = _analyzer()
+    sol = an.factory.seeded_solution(2)  # everything on the NPU: well-behaved
+    grid = an.saturation(sol, mode="grid")
+    bis = an.saturation(sol, mode="bisect")
+    assert bis.alpha_star == grid.alpha_star
+    assert len(bis.scores) < len(grid.scores) / 4
+
+
+def test_nsga_vectorized_matches_reference():
+    # differential test: numpy NSGA machinery vs the seed's pure-Python path.
+    # The non-dominated sort is exact arithmetic → must agree front-for-front.
+    # Niching involves fp distance ties, so for selection we check the
+    # front-rank composition rather than identical index picks.
+    from repro.core.nsga import fast_non_dominated_sort, nsga3_select
+
+    rng = random.Random(0)
+    for n_obj in (2, 4, 6):
+        fits = [
+            [rng.choice([rng.uniform(0, 1), rng.uniform(0, 1), 1e6])
+             for _ in range(n_obj)]
+            for _ in range(40)
+        ]
+        fronts_v = fast_non_dominated_sort(fits, vectorized=True)
+        fronts_p = fast_non_dominated_sort(fits, vectorized=False)
+        assert fronts_v == fronts_p
+        rank = {i: r for r, front in enumerate(fronts_v) for i in front}
+        sel_v = nsga3_select(fits, 15, rng=random.Random(1), vectorized=True)
+        sel_p = nsga3_select(fits, 15, rng=random.Random(1), vectorized=False)
+        assert len(sel_v) == len(sel_p) == 15
+        assert sorted(rank[i] for i in sel_v) == sorted(rank[i] for i in sel_p)
+
+
+def test_ga_oracle_drift_zero():
+    from repro.core import GAConfig
+    an = _analyzer(ga=GAConfig(pop_size=6, max_generations=3,
+                               min_generations=1, oracle_interval=1, seed=4))
+    res = an.run_ga()
+    assert res.oracle_drift, "oracle checks should have run"
+    assert all(d == 0.0 for _, d in res.oracle_drift)

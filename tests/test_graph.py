@@ -1,6 +1,6 @@
 """Graph IR: partitioning, convexity, Merkle hashing."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import Edge, Layer, ModelGraph, branching_graph, chain_graph
 
