@@ -15,12 +15,18 @@ Prints ``name,us_per_call,derived`` CSV rows. Sections:
              and an end-to-end GA + saturation speedup on a deterministic
              3-group scenario (with a makespan-parity check). ``--json``
              additionally writes BENCH_simspeed.json for regression tracking.
+* sweep   — randomized scenario-sweep harness (repro.experiments): per-
+            scenario α* for Puzzle / Best Mapping / NPU Only and the
+            aggregate frequency-gain ratios (paper §6, Fig. 11).
+            ``sweep --smoke`` is the CI smoke target: 2 scenarios with a
+            tiny GA, well under a minute.
 * roofline — per (arch × shape) roofline terms from the dry-run artifacts
              (EXPERIMENTS.md §Roofline)
 * kernels — Pallas kernel oracle agreement
 
-``--full`` runs all 10 random scenarios per group setting (default 3) —
-the paper's full protocol.
+Sections can be selected positionally (``run.py sweep --smoke``) or via
+``--only``. ``--full`` runs all 10 random scenarios per group setting
+(default 3) — the paper's full protocol (sweep: 10 scenarios instead of 4).
 """
 from __future__ import annotations
 
@@ -390,6 +396,52 @@ def bench_simspeed(args) -> None:
         emit("simspeed.json", 0.0, os.path.abspath(out))
 
 
+def bench_sweep(args) -> None:
+    """Scenario-sweep harness smoke/regression: per-scenario α* + aggregates.
+
+    ``--smoke``: 2 scenarios, tiny GA — a sub-minute regression check that
+    the harness end-to-end (generation → evaluation → aggregation) still
+    works and stays deterministic. Default: 4 scenarios at the harness's
+    real GA sizing (``--full``: 10). Always evaluates into a fresh temp run
+    dir so timings reflect real compute, not a resumed directory.
+    """
+    import tempfile
+
+    from repro.experiments import METHODS, SweepConfig, generate_scenario_specs
+    from repro.experiments.sweep import run_sweep
+
+    smoke = getattr(args, "smoke", False)
+    if smoke:
+        count, config = 2, SweepConfig(
+            pop_size=8, max_generations=6, min_generations=2, bm_max_evals=30,
+        )
+    else:
+        count, config = (10 if args.full else 4), SweepConfig()
+    specs = generate_scenario_specs(count, seed=2025)
+    t0 = time.perf_counter()
+    with tempfile.TemporaryDirectory(prefix="puzzle_sweep_bench_") as run_dir:
+        doc = run_sweep(specs, config, run_dir=run_dir, workers=1)
+    wall = time.perf_counter() - t0
+    for row in doc["scenarios"]:
+        stars = ";".join(
+            f"{m}={row['alpha_star'][m]}" for m in METHODS
+        )
+        emit(f"sweep.{row['spec']['name']}", row["wall_s"] * 1e6, stars)
+    agg = doc["aggregate"]
+    emit("sweep.gain_vs_npu_only", wall * 1e6 / count,
+         f"{agg['speedup_geomean']['vs_npu_only']:.2f}x (paper 3.7x)")
+    emit("sweep.gain_vs_best_mapping", wall * 1e6 / count,
+         f"{agg['speedup_geomean']['vs_best_mapping']:.2f}x (paper 2.2x)")
+    sat = agg["satisfaction_rate"]
+    emit("sweep.satisfaction", wall * 1e6,
+         ";".join(f"{m}={sat[m]:.2f}" for m in METHODS))
+    # determinism canary: regenerating the specs must reproduce the stored
+    # scenario compositions bit-for-bit
+    again = [s.to_json() for s in generate_scenario_specs(count, seed=2025)]
+    stored = [row["spec"] for row in doc["scenarios"]]
+    emit("sweep.deterministic", 0.0, f"ok={again == stored}")
+
+
 def bench_roofline(args) -> None:
     """Roofline terms per (arch × shape) from the dry-run artifacts."""
     pat = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun",
@@ -449,6 +501,7 @@ SECTIONS = {
     "fig15": bench_fig15,
     "table5": bench_table5,
     "simspeed": bench_simspeed,
+    "sweep": bench_sweep,
     "roofline": bench_roofline,
     "kernels": bench_kernels,
 }
@@ -456,15 +509,23 @@ SECTIONS = {
 
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("section", nargs="?", choices=sorted(SECTIONS),
+                    default=None, help="run just this section")
     ap.add_argument("--only", choices=sorted(SECTIONS), default=None)
     ap.add_argument("--full", action="store_true",
                     help="all 10 random scenarios per group setting")
+    ap.add_argument("--smoke", action="store_true",
+                    help="sweep section: 2 scenarios, tiny GA (<1 min)")
     ap.add_argument("--json", action="store_true",
                     help="also write BENCH_simspeed.json (simspeed section)")
     args = ap.parse_args()
+    if args.section and args.only and args.section != args.only:
+        ap.error(f"conflicting sections: positional {args.section!r} "
+                 f"vs --only {args.only!r}")
+    selected = args.section or args.only
     print("name,us_per_call,derived")
     for name, fn in SECTIONS.items():
-        if args.only and name != args.only:
+        if selected and name != selected:
             continue
         t0 = time.perf_counter()
         fn(args)

@@ -38,10 +38,12 @@ from .scenarios import (
     best_model_times,
     build_scenario,
     random_scenarios,
+    sample_groups,
     whole_model_placement,
 )
 from .scoring import (
     SaturationResult,
+    deadline_satisfaction,
     group_scores,
     percentile,
     qoe_score,

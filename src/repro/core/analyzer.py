@@ -266,13 +266,14 @@ class StaticAnalyzer:
         )
         return npu_only_solution(self.scenario.graphs, npu.pid, self.best_times)
 
-    def best_mapping(self, max_evals: int = 150) -> List[Solution]:
+    def best_mapping(self, max_evals: int = 150, seed: int = 0) -> List[Solution]:
         return best_mapping_solutions(
             self.scenario.graphs,
             [p.pid for p in self.processors],
             self.best_times,
             evaluate=lambda s: self.objectives(s, num_requests=self.cfg.fast_requests),
             max_evals=max_evals,
+            seed=seed,
         )
 
     # -- reporting ------------------------------------------------------------

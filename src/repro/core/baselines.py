@@ -6,6 +6,12 @@
   processor, then explore whole-model mappings (no partitioning) with a
   Pareto-archive hillclimb driven by the simulator. This accounts for
   inter-model interaction but cannot split models.
+
+Conventions shared with the rest of :mod:`repro.core`: all times are in
+**seconds**; ``best_times`` arguments are the output of
+:func:`repro.core.scenarios.best_model_times`; randomness is always drawn
+from a locally constructed ``random.Random(seed)``, never from the global
+RNG, so every function here is replayable from its arguments alone.
 """
 from __future__ import annotations
 
@@ -25,6 +31,8 @@ def _whole_model_solution(
     proc_per_net: Sequence[int],
     cfg_per_net: Sequence[Tuple[int, int]],
 ) -> Solution:
+    """Un-partitioned solution: network *n* whole on ``proc_per_net[n]`` with
+    ``(dtype_ix, backend_ix) = cfg_per_net[n]``; priority = network index."""
     return Solution(
         partition=[[0] * g.num_edges for g in graphs],
         mapping=[[proc_per_net[n]] * g.num_layers for n, g in enumerate(graphs)],
@@ -39,7 +47,11 @@ def npu_only_solution(
     npu_pid: int,
     best_times: Sequence[Dict[int, Tuple[float, int, int]]],
 ) -> Solution:
-    """All models un-partitioned on the NPU, best per-model configuration."""
+    """All models un-partitioned on the NPU, best per-model configuration.
+
+    Deterministic (no RNG): the (dtype, backend) choice per model is the
+    argmin over profiled times on ``npu_pid`` recorded in ``best_times``.
+    """
     cfgs = [(best_times[n][npu_pid][1], best_times[n][npu_pid][2]) for n in range(len(graphs))]
     return _whole_model_solution(graphs, [npu_pid] * len(graphs), cfgs)
 
@@ -56,7 +68,13 @@ def best_mapping_solutions(
 
     Starts from the per-model-fastest mapping, then explores single-model
     processor moves, keeping a Pareto archive, until no archive growth or
-    the evaluation budget is exhausted.
+    the evaluation budget (``max_evals`` distinct mappings) is exhausted.
+
+    ``evaluate`` maps a candidate :class:`Solution` to a minimized objective
+    tuple (makespan statistics in seconds, as produced by
+    ``StaticAnalyzer.objectives``). ``seed`` only shuffles neighbor visit
+    order via a local ``random.Random(seed)``; the same ``(best_times,
+    evaluate, max_evals, seed)`` always reproduces the same archive.
     """
     rng = random.Random(seed)
     n = len(graphs)

@@ -54,8 +54,11 @@ def best_model_times(
 ) -> List[Dict[int, Tuple[float, int, int]]]:
     """For each network and processor: (best time, dtype_ix, backend_ix).
 
-    This is the paper's per-model profiling step used both for base periods
-    (min over processors) and by the Best Mapping baseline.
+    Times are in **seconds** (the profiler's native unit; the paper's tables
+    are milliseconds). This is the paper's per-model profiling step used both
+    for base periods (min over processors) and by the Best Mapping baseline.
+    Deterministic: the profiler caches by profile key, so repeated calls
+    return identical values.
     """
     out: List[Dict[int, Tuple[float, int, int]]] = []
     for net, g in enumerate(graphs):
@@ -80,13 +83,43 @@ def base_periods(
     best_times: Sequence[Dict[int, Tuple[float, int, int]]],
     epsilon: float = EPSILON,
 ) -> List[float]:
-    """φ̄ per group (paper §6.1)."""
+    """φ̄ per group in **seconds** (paper §6.1).
+
+    ``φ̄_G = Σ_{m∈G} min_p τ_p(m) · N · (1 + ε)`` with N the number of
+    groups in the scenario and ε the slack factor (paper: 0.1).
+    ``best_times`` is the output of :func:`best_model_times` (seconds).
+    """
     n = scenario.num_groups
     periods = []
     for group in scenario.groups:
         s = sum(min(t for t, _, _ in best_times[m].values()) for m in group)
         periods.append(s * n * (1 + epsilon))
     return periods
+
+
+def sample_groups(
+    rng: random.Random,
+    model_names: Sequence[str],
+    min_groups: int = 1,
+    max_groups: int = 3,
+    min_models: int = 1,
+    max_models: int = 4,
+) -> List[Tuple[str, ...]]:
+    """Sample one random scenario composition (paper §6.1 recipe).
+
+    Draws a group count uniformly from ``[min_groups, max_groups]``, then for
+    each group a model count uniformly from ``[min_models, max_models]`` and
+    that many **distinct** models from ``model_names`` (models may repeat
+    *across* groups — :func:`build_scenario` materializes duplicates as
+    separate graph instances). All randomness comes from the caller-supplied
+    ``rng``, so a given ``random.Random(seed)`` state replays the exact same
+    composition; the function draws nothing from global RNG state.
+    """
+    groups: List[Tuple[str, ...]] = []
+    for _ in range(rng.randint(min_groups, max_groups)):
+        k = rng.randint(min_models, max_models)
+        groups.append(tuple(rng.sample(list(model_names), k)))
+    return groups
 
 
 def random_scenarios(
@@ -96,10 +129,17 @@ def random_scenarios(
     num_groups: int = 1,
     seed: int = 2025,
 ) -> List[List[Tuple[str, ...]]]:
-    """Random scenario compositions as lists of per-group model-name tuples.
+    """Random *fixed-size* scenario compositions (the Fig. 12/15 protocol).
 
     Single model group: ``num_groups=1`` with 6 models (paper §6.1).
-    Multiple groups: ``num_groups=2`` with 3 models each.
+    Multiple groups: ``num_groups=2`` with 3 models each. For the
+    variable-size sweep recipe (1–3 groups × 1–4 models) see
+    :func:`sample_groups` / :mod:`repro.experiments`.
+
+    Seed semantics: one ``random.Random(seed)`` stream drives all ``count``
+    compositions, so scenario *i* depends on ``seed`` **and** on every draw
+    before it; the same ``(model_names, count, models_per_scenario,
+    num_groups, seed)`` tuple always reproduces the same list.
     """
     rng = random.Random(seed)
     per_group = models_per_scenario // num_groups
@@ -119,7 +159,12 @@ def build_scenario(
     group_model_names: Sequence[Sequence[str]],
     graph_factory: Dict[str, ModelGraph],
 ) -> Scenario:
-    """Materialize a scenario from model names; duplicates get unique graphs."""
+    """Materialize a scenario from model names; duplicates get unique graphs.
+
+    ``group_model_names`` is a sequence of per-group name sequences (the
+    shape produced by :func:`sample_groups` / :func:`random_scenarios`).
+    Deterministic: graph indices are assigned in iteration order.
+    """
     graphs: List[ModelGraph] = []
     groups: List[Tuple[int, ...]] = []
     for gnames in group_model_names:

@@ -66,6 +66,30 @@ def scenario_score(
     return total / n
 
 
+def deadline_satisfaction(
+    per_group_makespans: Sequence[Sequence[float]],
+    per_group_deadlines: Sequence[float],
+) -> float:
+    """Fraction of *all* requests (pooled across groups) meeting their
+    group's deadline.
+
+    Unlike :func:`scenario_score` this is a plain hit rate — no sigmoid, no
+    per-group averaging — so it is the "satisfying the equivalent level of
+    real-time requirements" check of the paper's headline claim. Makespans
+    and deadlines are in the same unit (seconds throughout this repo);
+    dropped requests (``inf`` makespan) count as misses. Returns 0.0 for an
+    empty scenario.
+    """
+    total = 0
+    ok = 0
+    for ms, dl in zip(per_group_makespans, per_group_deadlines):
+        for m in ms:
+            total += 1
+            if m <= dl:
+                ok += 1
+    return ok / total if total else 0.0
+
+
 def percentile(values: Sequence[float], q: float) -> float:
     """Linear-interpolated percentile (q in [0, 100])."""
     vals = sorted(values)

@@ -1,0 +1,108 @@
+"""Scenario specifications for the randomized sweep (paper §6.1).
+
+A :class:`ScenarioSpec` is the *replayable identity* of one randomly
+generated scenario: which models, grouped how, plus the integer seed the
+evaluation's explicitly seeded stages (GA stream, baseline hillclimb
+shuffle, satisfaction-rate noise) derive from. Specs serialize to/from plain JSON dicts so a sweep run
+directory is self-describing and resumable — re-running a sweep with the
+same ``(count, seed, size bounds)`` regenerates byte-identical specs, and
+the harness cross-checks stored results against the regenerated spec before
+reusing them.
+
+Seed derivation is SHA-256 based (not ``hash()``) so it is stable across
+processes and interpreter runs regardless of ``PYTHONHASHSEED`` — the
+property that makes ``--workers N`` output identical to ``--workers 1``.
+"""
+from __future__ import annotations
+
+import hashlib
+import random
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from ..core.scenarios import sample_groups
+from ..zoo import MODEL_NAMES
+
+
+def scenario_stream_seed(sweep_seed: int, index: int) -> int:
+    """Deterministic 63-bit per-scenario seed from (sweep seed, index).
+
+    Each scenario gets its own independent RNG stream: drawing scenario *i*
+    never consumes randomness from scenario *j*, so scenarios can be
+    generated, re-generated, or evaluated in any order (and on any worker)
+    with identical results.
+    """
+    digest = hashlib.sha256(f"puzzle-sweep/{sweep_seed}/{index}".encode()).digest()
+    return int.from_bytes(digest[:8], "big") >> 1
+
+
+@dataclass(frozen=True)
+class ScenarioSpec:
+    """One randomized scenario: identity, composition, and RNG stream.
+
+    ``groups`` holds per-group tuples of model names from the nine-network
+    zoo (duplicates across groups allowed; materialized as distinct graphs).
+    ``seed`` is the scenario's private stream seed — the seeded evaluation
+    stages derive from it, never from global RNG state.
+    """
+
+    index: int
+    name: str
+    seed: int
+    groups: Tuple[Tuple[str, ...], ...]
+
+    @property
+    def num_models(self) -> int:
+        return sum(len(g) for g in self.groups)
+
+    def to_json(self) -> Dict[str, object]:
+        """Plain-JSON dict (lists instead of tuples); inverse of :meth:`from_json`."""
+        return {
+            "index": self.index,
+            "name": self.name,
+            "seed": self.seed,
+            "groups": [list(g) for g in self.groups],
+        }
+
+    @classmethod
+    def from_json(cls, d: Dict[str, object]) -> "ScenarioSpec":
+        return cls(
+            index=int(d["index"]),
+            name=str(d["name"]),
+            seed=int(d["seed"]),
+            groups=tuple(tuple(g) for g in d["groups"]),
+        )
+
+
+def generate_scenario_specs(
+    count: int,
+    seed: int = 0,
+    model_names: Sequence[str] = MODEL_NAMES,
+    min_groups: int = 1,
+    max_groups: int = 3,
+    min_models: int = 1,
+    max_models: int = 4,
+) -> List[ScenarioSpec]:
+    """Generate ``count`` randomized scenario specs per the §6.1 recipe.
+
+    For each scenario: 1–3 model groups (uniform), 1–4 distinct models per
+    group (uniform) sampled from ``model_names`` — bounds adjustable via the
+    keyword arguments. Scenario *i* is drawn from its own
+    ``random.Random(scenario_stream_seed(seed, i))`` stream, so the list is
+    a pure function of the arguments and any prefix of it is stable under a
+    larger ``count``.
+    """
+    specs: List[ScenarioSpec] = []
+    for i in range(count):
+        stream = scenario_stream_seed(seed, i)
+        rng = random.Random(stream)
+        groups = sample_groups(
+            rng, model_names,
+            min_groups=min_groups, max_groups=max_groups,
+            min_models=min_models, max_models=max_models,
+        )
+        specs.append(ScenarioSpec(
+            index=i, name=f"sweep_s{seed}_{i:03d}", seed=stream,
+            groups=tuple(groups),
+        ))
+    return specs
