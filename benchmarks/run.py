@@ -19,7 +19,9 @@ Prints ``name,us_per_call,derived`` CSV rows. Sections:
             scenario α* for Puzzle / Best Mapping / NPU Only and the
             aggregate frequency-gain ratios (paper §6, Fig. 11).
             ``sweep --smoke`` is the CI smoke target: 2 scenarios with a
-            tiny GA, well under a minute.
+            tiny GA, well under a minute. The default all-sections pass
+            also uses smoke sizing; explicit selection (``run.py sweep``)
+            or ``--full`` runs the full-size variant.
 * roofline — per (arch × shape) roofline terms from the dry-run artifacts
              (EXPERIMENTS.md §Roofline)
 * kernels — Pallas kernel oracle agreement
@@ -401,8 +403,12 @@ def bench_sweep(args) -> None:
 
     ``--smoke``: 2 scenarios, tiny GA — a sub-minute regression check that
     the harness end-to-end (generation → evaluation → aggregation) still
-    works and stays deterministic. Default: 4 scenarios at the harness's
-    real GA sizing (``--full``: 10). Always evaluates into a fresh temp run
+    works and stays deterministic. Smoke sizing is also used when this
+    section runs as part of the default all-sections pass, so ``run.py``
+    with no arguments stays quick; selecting the section explicitly
+    (``run.py sweep`` / ``--only sweep``) runs 4 scenarios at the harness's
+    real GA sizing, and ``--full`` (with or without section selection,
+    matching fig12/fig15) runs 10. Always evaluates into a fresh temp run
     dir so timings reflect real compute, not a resumed directory.
     """
     import tempfile
@@ -410,8 +416,12 @@ def bench_sweep(args) -> None:
     from repro.experiments import METHODS, SweepConfig, generate_scenario_specs
     from repro.experiments.sweep import run_sweep
 
-    smoke = getattr(args, "smoke", False)
-    if smoke:
+    # full sizing when the section is selected explicitly or --full asks for
+    # the paper's full protocol (matching fig12/fig15); otherwise the
+    # default all-sections pass stays quick with smoke sizing
+    explicit = getattr(args, "full", False) or "sweep" in (
+        getattr(args, "section", None), getattr(args, "only", None))
+    if getattr(args, "smoke", False) or not explicit:
         count, config = 2, SweepConfig(
             pop_size=8, max_generations=6, min_generations=2, bm_max_evals=30,
         )
@@ -424,7 +434,8 @@ def bench_sweep(args) -> None:
     wall = time.perf_counter() - t0
     for row in doc["scenarios"]:
         stars = ";".join(
-            f"{m}={row['alpha_star'][m]}" for m in METHODS
+            f"{m}={'never' if row['alpha_star'][m] is None else row['alpha_star'][m]}"
+            for m in METHODS
         )
         emit(f"sweep.{row['spec']['name']}", row["wall_s"] * 1e6, stars)
     agg = doc["aggregate"]

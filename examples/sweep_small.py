@@ -36,7 +36,9 @@ def main() -> None:
     config = SweepConfig(pop_size=12, max_generations=12, min_generations=4,
                          bm_max_evals=60)
     run_dir = os.path.join(tempfile.gettempdir(), "puzzle_sweep_small")
-    doc = run_sweep(specs, config, run_dir=run_dir, workers=1,
+    # force=True: a stale run dir from an older version of this demo (with a
+    # different config) is wiped instead of raising a config-mismatch error
+    doc = run_sweep(specs, config, run_dir=run_dir, workers=1, force=True,
                     log=lambda m: print(m, flush=True))
 
     print()

@@ -78,8 +78,13 @@ def deadline_satisfaction(
     real-time requirements" check of the paper's headline claim. Makespans
     and deadlines are in the same unit (seconds throughout this repo);
     dropped requests (``inf`` makespan) count as misses. Returns 0.0 for an
-    empty scenario.
+    empty scenario. Raises ``ValueError`` when the number of makespan groups
+    and deadlines disagree (a silently truncating ``zip`` would under-count).
     """
+    if len(per_group_makespans) != len(per_group_deadlines):
+        raise ValueError(
+            f"group count mismatch: {len(per_group_makespans)} makespan "
+            f"groups vs {len(per_group_deadlines)} deadlines")
     total = 0
     ok = 0
     for ms, dl in zip(per_group_makespans, per_group_deadlines):
@@ -91,7 +96,12 @@ def deadline_satisfaction(
 
 
 def percentile(values: Sequence[float], q: float) -> float:
-    """Linear-interpolated percentile (q in [0, 100])."""
+    """Linear-interpolated percentile (q in [0, 100]).
+
+    inf-safe: when q lands exactly on a sample, that sample is returned
+    directly instead of interpolating (``vals[lo] + 0.0 * inf`` would be
+    NaN when the next sample is ``inf``, e.g. an unsaturated α*).
+    """
     vals = sorted(values)
     if not vals:
         return float("inf")
@@ -101,6 +111,8 @@ def percentile(values: Sequence[float], q: float) -> float:
     lo = int(math.floor(pos))
     hi = min(lo + 1, len(vals) - 1)
     frac = pos - lo
+    if frac == 0.0 or vals[lo] == vals[hi]:
+        return vals[lo]
     return vals[lo] * (1 - frac) + vals[hi] * frac
 
 

@@ -25,8 +25,20 @@ from .evaluate import (
 )
 from .specs import ScenarioSpec, generate_scenario_specs, scenario_stream_seed
 
-__all__ = [k for k in dir() if not k.startswith("_")] + [
-    "run_sweep", "format_summary",
+__all__ = [
+    "METHODS",
+    "EvalContext",
+    "ScenarioResult",
+    "ScenarioSpec",
+    "SweepConfig",
+    "aggregate_results",
+    "default_context",
+    "evaluate_scenario",
+    "format_summary",
+    "generate_scenario_specs",
+    "geometric_mean",
+    "run_sweep",
+    "scenario_stream_seed",
 ]
 
 

@@ -24,8 +24,6 @@ import time
 from dataclasses import asdict, dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from ..core.scoring import percentile
-
 from ..core import (
     AnalyzerConfig,
     GAConfig,
@@ -37,6 +35,7 @@ from ..core import (
     build_scenario,
     deadline_satisfaction,
     mobile_processors,
+    percentile,
 )
 from ..core.profiler import AnalyticMobileBackend
 from ..zoo import all_cost_graphs, paper_profile_tables
@@ -136,6 +135,24 @@ class ScenarioResult:
     ga_evaluations: int
     pareto_size: int
     wall_s: float
+
+    def __post_init__(self) -> None:
+        # NaN has no JSON representation and poisons every downstream
+        # aggregate (min/percentile/geomean all propagate it silently), so
+        # reject it at construction instead of serializing garbage.
+        nan_fields = [
+            f"{name}[{k}]"
+            for name, mapping in (("alpha_star", self.alpha_star),
+                                  ("alpha_star_best", self.alpha_star_best),
+                                  ("ratios", self.ratios),
+                                  ("satisfaction", self.satisfaction))
+            for k, v in mapping.items() if math.isnan(v)
+        ] + [f"base_periods_s[{i}]" for i, v in enumerate(self.base_periods_s)
+             if math.isnan(v)]
+        if nan_fields:
+            raise ValueError(
+                f"NaN in ScenarioResult({self.spec.name}): "
+                + ", ".join(nan_fields))
 
     def to_json(self) -> Dict[str, object]:
         return {

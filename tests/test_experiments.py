@@ -159,6 +159,19 @@ def test_deadline_satisfaction_pools_requests():
     assert deadline_satisfaction([[]], [1.0]) == 0.0
 
 
+def test_deadline_satisfaction_rejects_group_mismatch():
+    with pytest.raises(ValueError, match="group count mismatch"):
+        deadline_satisfaction([[0.5], [0.5]], [1.0])
+
+
+def test_scenario_result_rejects_nan():
+    with pytest.raises(ValueError, match="alpha_star\\[puzzle\\]"):
+        _canned(0, {"puzzle": float("nan"), "best_mapping": 2.0,
+                    "npu_only": 2.0},
+                {"npu_only": 2.0, "best_mapping": 2.0},
+                {m: 1.0 for m in METHODS})
+
+
 # -- end-to-end: resume + worker determinism --------------------------------
 
 def _strip_wall(doc):

@@ -52,6 +52,18 @@ def test_percentile():
     assert percentile(vals, 90) == pytest.approx(9.1)
 
 
+def test_percentile_inf_safe():
+    # odd length, q=50 lands exactly on the middle sample: must not become
+    # NaN via vals[lo] + 0.0 * inf (unsaturated alpha* candidate sets)
+    inf = float("inf")
+    assert percentile([1.0, 2.0, inf], 50.0) == 2.0
+    assert percentile([1.0, inf, inf], 100.0) == inf
+    assert percentile([inf], 50.0) == inf
+    # interpolation that straddles the inf boundary is unsaturated
+    assert percentile([1.0, inf], 50.0) == inf
+    assert not math.isnan(percentile([1.0, 2.0, 3.0, inf, inf], 50.0))
+
+
 def test_saturation_multiplier_monotone_score():
     # score saturates above alpha=2 exactly
     res = saturation_multiplier(lambda a: 1.0 if a >= 2.0 else 0.5,
