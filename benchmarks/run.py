@@ -378,6 +378,94 @@ def bench_simspeed(args) -> None:
     record["e2e_speedup"] = old_s / new_s
     record["e2e_alpha_star"] = {"seed_path": old_alpha, "fast_path": new_alpha}
 
+    # 6) generation-batched population evaluation (core/batchsim): evaluate
+    #    one GA-realistic generation (pop_size 40 -> 40 parents + 40
+    #    offspring) through (a) the per-solution fast path, (b) one
+    #    in-process lock-step batch pass, (c) the batch pass sharded across
+    #    a 2-process pool. All three produce bit-identical objectives
+    #    (asserted); the recorded numbers are the honest population-eval
+    #    throughput comparison on this host.
+    import random as _random
+
+    gen_an = make_analyzer("fast", "bisect")
+    gen_an.factory.rng = _random.Random(4242)
+    parents = [gen_an.factory.random_solution() for _ in range(40)]
+    offspring = []
+    for i in range(0, 40, 2):
+        a, b = parents[i], parents[i + 1]
+        c1, c2 = gen_an.factory.crossover(a, b)
+        offspring.append(gen_an.factory.mutate(c1))
+        offspring.append(gen_an.factory.mutate(c2))
+    generation = parents + offspring
+
+    def time_population(fn, an) -> Tuple[float, object]:
+        gc.collect()
+        gc.disable()
+        try:
+            t0 = time.perf_counter()
+            out = fn(an)
+            return time.perf_counter() - t0, out
+        finally:
+            gc.enable()
+
+    per_s, objs_loop = time_population(
+        lambda a: [a.objectives(s) for s in generation],
+        make_analyzer("fast", "bisect"))
+    bat_s, objs_batch = time_population(
+        lambda a: a.objectives_batch(generation),
+        make_analyzer("fast", "bisect"))
+    an_sh = make_analyzer("fast", "bisect")
+    an_sh.cfg.batch_workers = 2
+    an_sh.objectives_batch(generation[:4])  # warm the pool + caches
+    an_sh2 = make_analyzer("fast", "bisect")
+    an_sh2.cfg.batch_workers = 2
+    an_sh2._batch_pool = an_sh._batch_pool  # reuse the live pool
+    shard_s, objs_shard = time_population(
+        lambda a: a.objectives_batch(generation), an_sh2)
+    an_sh2._batch_pool = None
+    an_sh.close()
+    assert objs_loop == objs_batch == objs_shard, "batch parity violated"
+    n = len(generation)
+    per_us, bat_us, shard_us = (x / n * 1e6 for x in (per_s, bat_s, shard_s))
+    best_us = min(bat_us, shard_us)
+    speedup = per_us / best_us
+    emit("simspeed.pop_eval_per_solution", per_us,
+         f"{n}-candidate generation;evals_per_s={1e6 / per_us:.0f}")
+    emit("simspeed.pop_eval_batch", bat_us,
+         f"one lock-step pass;speedup=x{per_us / bat_us:.2f}")
+    emit("simspeed.pop_eval_batch_sharded", shard_us,
+         f"2-process shards;speedup=x{per_us / shard_us:.2f}")
+    record["eval_us_population_per_solution"] = per_us
+    record["eval_us_batch"] = best_us
+    record["eval_us_batch_inprocess"] = bat_us
+    record["eval_us_batch_sharded"] = shard_us
+    record["batch_speedup"] = speedup
+    record["batch_parity_ok"] = True
+
+    # batched population α*-search over a candidate set (Pareto-front shape)
+    sat_cands = parents[:8]
+    sat_per_s, sat_loop = time_population(
+        lambda a: [a.saturation(s) for s in sat_cands],
+        make_analyzer("fast", "bisect"))
+    sat_bat_s, sat_batch = time_population(
+        lambda a: a.population_saturation(sat_cands),
+        make_analyzer("fast", "bisect"))
+    assert [r.alpha_star for r in sat_loop] == \
+        [r.alpha_star for r in sat_batch], "saturation parity violated"
+    emit("simspeed.pop_alpha_star_per_solution", sat_per_s / 8 * 1e6,
+         "bisect per candidate")
+    emit("simspeed.pop_alpha_star_batch", sat_bat_s / 8 * 1e6,
+         f"batched rounds;speedup=x{sat_per_s / sat_bat_s:.2f}")
+    record["alpha_star_us_population_per_solution"] = sat_per_s / 8 * 1e6
+    record["alpha_star_us_population_batch"] = sat_bat_s / 8 * 1e6
+    record["batch_notes"] = (
+        "batchsim is bit-identical to the per-solution fast path (asserted "
+        "above and by the differential property suite); on this CPU the "
+        "lock-step SIMD pass amortizes numpy dispatch but each event still "
+        "touches ~30 scalars, so per-solution python remains competitive "
+        "at GA widths - see ARCHITECTURE.md (engines) for the measured "
+        "crossover analysis")
+
     if getattr(args, "json", False):
         record["timestamp"] = time.time()
 

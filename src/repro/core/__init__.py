@@ -1,6 +1,13 @@
 """Puzzle core: the paper's contribution — GA-based multi-model scheduling."""
 from .analyzer import AnalyzerConfig, StaticAnalyzer
 from .baselines import best_mapping_solutions, npu_only_solution
+from .batchsim import (
+    BatchLane,
+    BatchResult,
+    BatchSimulator,
+    batch_objectives,
+    run_batch,
+)
 from .chromosome import (
     BACKENDS,
     DTYPES,
@@ -9,6 +16,7 @@ from .chromosome import (
     SolutionFactory,
     decode_solution,
     subgraph_processor,
+    upmx,
 )
 from .comm import (
     PAPER_COMM_MODEL,
@@ -43,6 +51,7 @@ from .scenarios import (
 )
 from .scoring import (
     SaturationResult,
+    bisect_alpha_probes,
     deadline_satisfaction,
     group_scores,
     percentile,

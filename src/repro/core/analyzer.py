@@ -17,6 +17,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from .baselines import best_mapping_solutions, npu_only_solution
+from .batchsim import BatchLane, batch_objectives, run_batch
 from .chromosome import Solution, SolutionFactory, decode_solution
 from .comm import PiecewiseLinearCommModel
 from .fastsim import FastSimSpec, FastSimulator, SpecBuilder, build_spec
@@ -25,7 +26,9 @@ from .processors import Processor
 from .profiler import Profiler
 from .scenarios import Scenario, base_periods, best_model_times
 from .scoring import (
+    ALPHA_GRID,
     SaturationResult,
+    bisect_alpha_probes,
     percentile,
     saturation_multiplier,
     saturation_multiplier_bisect,
@@ -57,6 +60,12 @@ class AnalyzerConfig:
     # α*-search: "bisect" brackets-then-bisects the near-monotone score curve
     # (~15 score() calls); "grid" is the paper-faithful 117-point linear scan.
     saturation_mode: str = "bisect"
+    # Generation-batched evaluation (repro.core.batchsim): ``batch_workers``
+    # shards batch lanes across a persistent process pool (1 = in-process
+    # single lock-step pass). Results are bit-identical for any value. The
+    # GA routes its generation evaluations through the batch path when
+    # ``ga.batch_eval`` is set.
+    batch_workers: int = 1
 
 
 class StaticAnalyzer:
@@ -94,6 +103,40 @@ class StaticAnalyzer:
         # decode to the same placed configuration share evaluation results.
         self._objective_cache: "OrderedDict[Tuple, Tuple[float, ...]]" = OrderedDict()
         self.objective_cache_hits = 0
+        self._batch_pool = None  # lazy ProcessPoolExecutor (batch_workers > 1)
+
+    # -- batch plumbing ------------------------------------------------------
+    def _pool(self):
+        if self.cfg.batch_workers > 1 and self._batch_pool is None:
+            from concurrent.futures import ProcessPoolExecutor
+            self._batch_pool = ProcessPoolExecutor(
+                max_workers=self.cfg.batch_workers)
+        return self._batch_pool
+
+    def close(self) -> None:
+        """Shut down the batch process pool (no-op when unused)."""
+        if self._batch_pool is not None:
+            self._batch_pool.shutdown()
+            self._batch_pool = None
+
+    def _lane(
+        self,
+        solution: Solution,
+        alpha: float,
+        num_requests: int,
+        measured: bool,
+        seed: int = 0,
+    ) -> BatchLane:
+        """One batch lane, mirroring :meth:`simulate`'s parameters."""
+        return BatchLane(
+            spec=self.solution_spec(solution),
+            periods=[alpha * p for p in self.base_periods],
+            num_requests=num_requests,
+            noise=(NoiseModel(self.cfg.noise.sigma_by_kind, seed=seed)
+                   if measured else None),
+            dispatch_overhead=self.cfg.dispatch_overhead if measured else 0.0,
+            dispatch_pid=self.cfg.dispatch_pid,
+        )
 
     # -- simulation ------------------------------------------------------------
     def solution_spec(self, solution: Solution) -> FastSimSpec:
@@ -192,6 +235,61 @@ class StaticAnalyzer:
                 self._objective_cache.popitem(last=False)
         return out
 
+    def objectives_batch(
+        self,
+        solutions: Sequence[Solution],
+        alpha: Optional[float] = None,
+        num_requests: Optional[int] = None,
+        measured: bool = False,
+    ) -> List[Tuple[float, ...]]:
+        """GA objectives for a whole generation in one batched pass.
+
+        Deduplicates against (and fills) the same signature-keyed objective
+        cache as :meth:`objectives`, builds one padded struct-of-arrays
+        batch for the misses and runs them through the lock-step
+        :class:`~repro.core.batchsim.BatchSimulator` (sharded across
+        ``cfg.batch_workers`` processes when configured). Per-solution
+        results are bit-identical to calling :meth:`objectives` in a loop —
+        enforced by the differential property suite.
+        """
+        alpha = alpha if alpha is not None else self.cfg.search_alpha
+        num_requests = num_requests or self.cfg.fast_requests
+        keys = [
+            (self.solution_spec(s).signature(), alpha, num_requests, measured)
+            for s in solutions
+        ]
+        lane_of_key: Dict[Tuple, int] = {}
+        lanes: List[BatchLane] = []
+        for sol, key in zip(solutions, keys):
+            if key in self._objective_cache or key in lane_of_key:
+                continue
+            lane_of_key[key] = len(lanes)
+            lanes.append(self._lane(sol, alpha, num_requests, measured))
+        fresh: List[Tuple[float, ...]] = []
+        if lanes:
+            result = run_batch(
+                lanes, self.scenario.groups, self.processors,
+                workers=self.cfg.batch_workers, pool=self._pool(),
+            )
+            fresh = batch_objectives(result)
+            for key, lane_ix in lane_of_key.items():
+                self._objective_cache[key] = fresh[lane_ix]
+            while len(self._objective_cache) > 4 * self.cfg.decode_cache_size:
+                self._objective_cache.popitem(last=False)
+        out: List[Tuple[float, ...]] = []
+        for sol, key in zip(solutions, keys):
+            hit = self._objective_cache.get(key)
+            if hit is None:
+                # a generation larger than the cache bound evicted this key
+                # before read-back: take the batch value directly when it
+                # was computed this call, else the scalar path.
+                ix = lane_of_key.get(key)
+                hit = fresh[ix] if ix is not None else self.objectives(
+                    sol, alpha=alpha, num_requests=num_requests,
+                    measured=measured)
+            out.append(hit)
+        return out
+
     def score(
         self,
         solution: Solution,
@@ -227,6 +325,119 @@ class StaticAnalyzer:
             return saturation_multiplier(evaluate)
         return saturation_multiplier_bisect(evaluate)
 
+    def simulate_batch(
+        self,
+        pairs: Sequence[Tuple[Solution, float]],
+        num_requests: int,
+        measured: bool = False,
+        seed: int = 0,
+    ):
+        """Simulate many ``(solution, α)`` pairs in one lock-step batch.
+
+        The returned :class:`~repro.core.batchsim.BatchResult` indexes lanes
+        in ``pairs`` order; each lane is bit-identical to the corresponding
+        :meth:`simulate` call (``collect_tasks=False``).
+        """
+        lanes = [
+            self._lane(sol, alpha, num_requests, measured, seed=seed)
+            for sol, alpha in pairs
+        ]
+        return run_batch(
+            lanes, self.scenario.groups, self.processors,
+            workers=self.cfg.batch_workers, pool=self._pool(),
+        )
+
+    def score_batch(
+        self,
+        requests: Sequence[Tuple[Solution, float]],
+        num_requests: Optional[int] = None,
+        measured: bool = True,
+        seed: int = 0,
+    ) -> List[float]:
+        """XRBench scores for many ``(solution, α)`` pairs in one batch.
+
+        Identical per pair to :meth:`score` (same measured simulation, same
+        python-float score arithmetic); duplicate ``(spec, α)`` pairs within
+        the batch simulate once.
+        """
+        if not requests:
+            return []
+        num_requests = num_requests or self.cfg.accurate_requests
+        lane_of_key: Dict[Tuple, int] = {}
+        lanes: List[BatchLane] = []
+        keys: List[Tuple] = []
+        for sol, alpha in requests:
+            key = (self.solution_spec(sol).signature(), alpha)
+            keys.append(key)
+            if key not in lane_of_key:
+                lane_of_key[key] = len(lanes)
+                lanes.append(self._lane(sol, alpha, num_requests,
+                                        measured, seed=seed))
+        result = run_batch(
+            lanes, self.scenario.groups, self.processors,
+            workers=self.cfg.batch_workers, pool=self._pool(),
+        )
+        num_groups = self.scenario.num_groups
+        lane_scores: List[float] = []
+        for lane_ix, lane in enumerate(lanes):
+            per_group = [
+                result.makespans(lane_ix, g) for g in range(num_groups)
+            ]
+            # deadline = α·base period = the lane's periods, same floats as
+            # score()'s `[alpha * p for p in self.base_periods]`
+            lane_scores.append(scenario_score(per_group, list(lane.periods)))
+        return [lane_scores[lane_of_key[k]] for k in keys]
+
+    def population_saturation(
+        self,
+        solutions: Sequence[Solution],
+        mode: Optional[str] = None,
+    ) -> List[SaturationResult]:
+        """α*-search for a whole candidate population, batched per round.
+
+        Drives one :func:`bisect_alpha_probes` state machine per solution in
+        lock-step rounds: every round gathers each unfinished solution's
+        next lattice probe, evaluates all of them as a single measured
+        batch (deduplicated, sharded when configured) and feeds the scores
+        back. The probe sequence per solution is exactly the scalar
+        bisection's, so results equal ``[self.saturation(s) for s in
+        solutions]`` bit for bit; only the wall-clock differs. ``mode``
+        "grid" batches the 117-point scan per round instead.
+        """
+        if not solutions:
+            return []
+        mode = mode or self.cfg.saturation_mode
+        if mode == "grid":
+            alphas = ALPHA_GRID
+            scores = self.score_batch(
+                [(s, a) for s in solutions for a in alphas])
+            out: List[SaturationResult] = []
+            for ix in range(len(solutions)):
+                chunk = dict(zip(
+                    alphas, scores[ix * len(alphas):(ix + 1) * len(alphas)]))
+                out.append(saturation_multiplier(lambda a: chunk[a]))
+            return out
+        gens = [bisect_alpha_probes() for _ in solutions]
+        pending: Dict[int, float] = {}
+        results: Dict[int, SaturationResult] = {}
+        for ix, gen in enumerate(gens):
+            try:
+                pending[ix] = next(gen)
+            except StopIteration as stop:  # pragma: no cover (never empty)
+                results[ix] = stop.value
+        while pending:
+            order = sorted(pending)
+            scores = self.score_batch(
+                [(solutions[ix], pending[ix]) for ix in order])
+            nxt: Dict[int, float] = {}
+            for ix, sc in zip(order, scores):
+                try:
+                    nxt[ix] = gens[ix].send(sc)
+                except StopIteration as stop:
+                    results[ix] = stop.value
+            pending = nxt
+        return [results[ix] for ix in range(len(solutions))]
+
     # -- search ------------------------------------------------------------
     def run_ga(self, seeds: Sequence[Solution] = ()) -> GAResult:
         scheduler = GeneticScheduler(
@@ -241,6 +452,15 @@ class StaticAnalyzer:
             # (expected 0.0 — the engines are bit-identical).
             evaluate_oracle=lambda s: self.objectives(
                 s, num_requests=self.cfg.fast_requests, engine="reference"
+            ),
+            # Whole-generation evaluation through the lock-step batch engine
+            # (used when ga.batch_eval is set); bit-identical to the
+            # per-child loop.
+            evaluate_batch=lambda sols, accurate: self.objectives_batch(
+                sols,
+                num_requests=(self.cfg.accurate_requests if accurate
+                              else self.cfg.fast_requests),
+                measured=accurate,
             ),
             config=self.cfg.ga,
         )

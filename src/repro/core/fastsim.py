@@ -83,6 +83,23 @@ class FastSimSpec:
     def num_subgraphs(self) -> int:
         return len(self.proc_of)
 
+    def roots(self) -> List[List[int]]:
+        """Per-network flat ids of dependency-free subgraphs, cached.
+
+        These are released at every request arrival, so all three engines
+        (fast heapq loop, lean loop, batch lock-step pass) need them for
+        every run of the same spec — compute once per spec instead.
+        """
+        r = getattr(self, "_roots", None)
+        if r is None:
+            r = self._roots = [
+                [g for g in range(self.offsets[n],
+                                  self.offsets[n] + self.counts[n])
+                 if self.dep_count[g] == 0]
+                for n in range(len(self.counts))
+            ]
+        return r
+
     def signature(self) -> Tuple:
         """Content key: two specs with equal signatures simulate identically.
 
@@ -432,7 +449,7 @@ class FastSimulator:
         comm_v, quant_v, exec_v = spec.comm, spec.quant, spec.exec_
         dep_count = spec.dep_count
         indptr, succ = spec.succ_indptr, spec.succ_flat
-        offsets, counts = spec.offsets, spec.counts
+        counts = spec.counts
         overlap = self.overlap_comm
 
         pids = [p.pid for p in spec.processors]
@@ -445,11 +462,7 @@ class FastSimulator:
         group_tasks = [sum(counts[n] for n in g) for g in self.groups]
 
         req_records: Dict[Tuple[int, int], RequestRecord] = {}
-        roots = [
-            [g for g in range(offsets[n], offsets[n] + counts[n])
-             if dep_count[g] == 0]
-            for n in range(len(counts))
-        ]
+        roots = spec.roots()
 
         events: list = []
         push = heapq.heappush
@@ -539,7 +552,7 @@ class FastSimulator:
         dep_count = spec.dep_count
         indptr, succ = spec.succ_indptr, spec.succ_flat
         net_of, k_of = spec.net_of, spec.k_of
-        offsets, counts = spec.offsets, spec.counts
+        counts = spec.counts
         overlap = self.overlap_comm
         dispatch_ov = self.dispatch_overhead
         dispatch_pid = self.dispatch_pid
@@ -564,11 +577,7 @@ class FastSimulator:
         tasks: List[TaskRecord] = []
         req_records: Dict[Tuple[int, int], RequestRecord] = {}
         # per-network flat ids of dependency-free subgraphs, released at arrival
-        roots = [
-            [g for g in range(offsets[n], offsets[n] + counts[n])
-             if dep_count[g] == 0]
-            for n in range(len(counts))
-        ]
+        roots = spec.roots()
 
         events: list = []
         push = heapq.heappush

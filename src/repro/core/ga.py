@@ -19,6 +19,8 @@ from .nsga import fast_non_dominated_sort, nsga3_select
 
 Objective = Tuple[float, ...]
 EvalFn = Callable[[Solution], Objective]
+# batch evaluator: (solutions, accurate) -> objectives, one per solution
+BatchEvalFn = Callable[[Sequence[Solution], bool], List[Objective]]
 
 
 @dataclass
@@ -41,6 +43,12 @@ class GAConfig:
     # False selects the pure-Python NSGA reference implementations (the seed
     # code path, kept for differential testing and seed-path benchmarking).
     vectorized_nsga: bool = True
+    # Route whole-generation evaluations (offspring fast evals + front-0
+    # accurate re-evals) through the scheduler's batch evaluator instead of
+    # the per-child loop. Fitness values are identical either way (the batch
+    # engine is bit-exact; enforced by tests/test_ga_determinism.py); only
+    # wall-clock and the evaluation counter's cache interleaving differ.
+    batch_eval: bool = False
 
 
 @dataclass
@@ -64,11 +72,13 @@ class GeneticScheduler:
         evaluate_accurate: Optional[EvalFn] = None,
         config: Optional[GAConfig] = None,
         evaluate_oracle: Optional[EvalFn] = None,
+        evaluate_batch: Optional[BatchEvalFn] = None,
     ):
         self.factory = factory
         self.evaluate_fast = evaluate_fast
         self.evaluate_accurate = evaluate_accurate or evaluate_fast
         self.evaluate_oracle = evaluate_oracle
+        self.evaluate_batch = evaluate_batch
         self.cfg = config or GAConfig()
         self.rng = random.Random(self.cfg.seed)
         self.evaluations = 0
@@ -84,6 +94,32 @@ class GeneticScheduler:
         self.evaluations += 1
         self._cache[key] = obj
         return obj
+
+    def _eval_generation(
+        self, sols: Sequence[Solution], accurate: bool = False
+    ) -> List[Objective]:
+        """Evaluate a whole generation, batched when configured.
+
+        Memoization and the evaluation counter behave like per-child
+        :meth:`_eval` calls; the batch evaluator additionally dedups by
+        decoded content downstream. Falls back to the per-child loop when no
+        batch evaluator is wired or ``cfg.batch_eval`` is off.
+        """
+        if not (self.cfg.batch_eval and self.evaluate_batch is not None):
+            return [self._eval(s, accurate) for s in sols]
+        missing: List[Solution] = []
+        seen = set()
+        for s in sols:
+            key = (s.key(), accurate)
+            if key not in self._cache and key not in seen:
+                seen.add(key)
+                missing.append(s)
+        if missing:
+            objs = self.evaluate_batch(missing, accurate)
+            for s, obj in zip(missing, objs):
+                self._cache[(s.key(), accurate)] = obj
+                self.evaluations += 1
+        return [self._cache[(s.key(), accurate)] for s in sols]
 
     # -- local search (paper §4.3) ---------------------------------------------
     def _local_merge(self, sol: Solution) -> Solution:
@@ -134,8 +170,8 @@ class GeneticScheduler:
         while len(pop) < cfg.pop_size:
             pop.append(self.factory.random_solution())
         pop = pop[: cfg.pop_size]
-        for s in pop:
-            s.fitness = self._eval(s)
+        for s, obj in zip(pop, self._eval_generation(pop)):
+            s.fitness = obj
 
         history: List[float] = []
         oracle_drift: List[Tuple[int, float]] = []
@@ -155,8 +191,11 @@ class GeneticScheduler:
                 c1 = self.factory.mutate(c1, cfg.p_bit, cfg.p_map, cfg.p_prio, cfg.p_cfg)
                 c2 = self.factory.mutate(c2, cfg.p_bit, cfg.p_map, cfg.p_prio, cfg.p_cfg)
                 offspring.extend([c1, c2])
+            # whole-generation fast evaluation (batched when configured),
+            # then the probabilistic local search pass per child
+            for child, obj in zip(offspring, self._eval_generation(offspring)):
+                child.fitness = obj
             for k, child in enumerate(offspring):
-                child.fitness = self._eval(child)
                 if self.rng.random() < cfg.p_local:
                     child = self._local_merge(child)
                     child = self._local_reposition(child)
@@ -166,8 +205,10 @@ class GeneticScheduler:
             combined = pop + offspring
             fits = [list(s.fitness) for s in combined]
             front0 = fast_non_dominated_sort(fits, vectorized=cfg.vectorized_nsga)[0]
-            for ix in front0:
-                combined[ix].fitness = self._eval(combined[ix], accurate=True)
+            front0_objs = self._eval_generation(
+                [combined[ix] for ix in front0], accurate=True)
+            for ix, obj in zip(front0, front0_objs):
+                combined[ix].fitness = obj
             fits = [list(s.fitness) for s in combined]
             keep = nsga3_select(fits, cfg.pop_size, rng=self.rng,
                                 vectorized=cfg.vectorized_nsga)

@@ -12,6 +12,11 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 RT_K = 15.0  # sigmoid sharpness, same as XRBench
 
+#: The paper's α lattice: 0.2 .. 6.0 in 0.05 steps. Shared by the grid scan,
+#: the bisection defaults and the batched population search so they always
+#: probe the same points.
+ALPHA_GRID = tuple(round(0.2 + 0.05 * i, 4) for i in range(117))
+
 
 def qoe_score(makespans: Sequence[float], deadline: float) -> float:
     """Fraction of requests finishing within the deadline (= period)."""
@@ -135,7 +140,7 @@ def saturation_multiplier(
     return the first α from which the score stays saturated.
     """
     if alphas is None:
-        alphas = [round(0.2 + 0.05 * i, 4) for i in range(117)]  # 0.2 .. 6.0
+        alphas = ALPHA_GRID
     samples: List[Tuple[float, float]] = []
     sat_from: Optional[float] = None
     for a in alphas:
@@ -150,6 +155,58 @@ def saturation_multiplier(
         alpha_star=sat_from if sat_from is not None else float("inf"),
         scores=samples,
     )
+
+
+def bisect_alpha_probes(
+    lo: float = 0.2,
+    hi: float = 6.0,
+    step: float = 0.05,
+    threshold: float = 0.995,
+    confirm: int = 4,
+):
+    """Generator core of the bracket-then-bisect α*-search.
+
+    Yields the α value to evaluate next; the driver sends back the score.
+    Returns (via ``StopIteration.value``) the final
+    :class:`SaturationResult`. Factoring the probe *sequence* out of the
+    evaluation lets the scalar search and the population-batched search
+    (``StaticAnalyzer.population_saturation``) share one algorithm, so they
+    probe identical lattice points and return identical results by
+    construction.
+    """
+    n = int(round((hi - lo) / step))
+    cache: Dict[int, float] = {}
+
+    def ev(i: int):
+        s = cache.get(i)
+        if s is None:
+            s = yield round(lo + step * i, 4)
+            cache[i] = s
+        return s
+
+    def result(alpha_star: float) -> SaturationResult:
+        samples = sorted((round(lo + step * i, 4), s) for i, s in cache.items())
+        return SaturationResult(alpha_star=alpha_star, scores=samples)
+
+    if (yield from ev(n)) < threshold:
+        return result(float("inf"))
+    floor = -1  # highest lattice index known (or assumed) unsaturated
+    while True:
+        a, b = floor, n  # invariant: ev(b) >= threshold
+        while b - a > 1:
+            mid = (a + b) // 2
+            if (yield from ev(mid)) >= threshold:
+                b = mid
+            else:
+                a = mid
+        dip = None
+        for j in range(b + 1, min(b + confirm + 1, n)):
+            if (yield from ev(j)) < threshold:
+                dip = j
+                break
+        if dip is None:
+            return result(round(lo + step * b, 4))
+        floor = dip  # dip strictly above the previous bracket → terminates
 
 
 def saturation_multiplier_bisect(
@@ -175,37 +232,14 @@ def saturation_multiplier_bisect(
        semantics). Dips wider than ``confirm`` grid points between the
        candidate and ``hi`` can be missed — that is the accuracy/speed
        trade-off versus the exhaustive scan.
+
+    The probe sequence itself lives in :func:`bisect_alpha_probes`; this
+    wrapper drives it with a plain callable.
     """
-    n = int(round((hi - lo) / step))
-    cache: Dict[int, float] = {}
-
-    def ev(i: int) -> float:
-        s = cache.get(i)
-        if s is None:
-            s = evaluate(round(lo + step * i, 4))
-            cache[i] = s
-        return s
-
-    def result(alpha_star: float) -> SaturationResult:
-        samples = sorted((round(lo + step * i, 4), s) for i, s in cache.items())
-        return SaturationResult(alpha_star=alpha_star, scores=samples)
-
-    if ev(n) < threshold:
-        return result(float("inf"))
-    floor = -1  # highest lattice index known (or assumed) unsaturated
-    while True:
-        a, b = floor, n  # invariant: ev(b) >= threshold
-        while b - a > 1:
-            mid = (a + b) // 2
-            if ev(mid) >= threshold:
-                b = mid
-            else:
-                a = mid
-        dip = None
-        for j in range(b + 1, min(b + confirm + 1, n)):
-            if ev(j) < threshold:
-                dip = j
-                break
-        if dip is None:
-            return result(round(lo + step * b, 4))
-        floor = dip  # dip strictly above the previous bracket → terminates
+    gen = bisect_alpha_probes(lo, hi, step, threshold, confirm)
+    try:
+        alpha = next(gen)
+        while True:
+            alpha = gen.send(evaluate(alpha))
+    except StopIteration as stop:
+        return stop.value

@@ -65,6 +65,15 @@ class SweepConfig:
     alpha_cap: float = 6.0
     satisfaction_alpha: float = 1.0
     satisfaction_requests: int = 36
+    # Route the α*-searches and satisfaction sims through the
+    # generation-batched engine (repro.core.batchsim): every bisection round
+    # evaluates the whole candidate population as one lock-step batch, and
+    # the three satisfaction sims share a batch. Per-scenario results are
+    # bit-identical either way (tests assert it); on CPU the per-solution
+    # loop is currently faster at typical candidate-set widths, so the
+    # default stays off — see BENCH_simspeed.json's batch section.
+    use_batch: bool = False
+    batch_workers: int = 1
 
     def to_json(self) -> Dict[str, object]:
         return asdict(self)
@@ -226,6 +235,7 @@ def evaluate_scenario(
         AnalyzerConfig(
             engine=config.engine,
             saturation_mode=config.saturation_mode,
+            batch_workers=config.batch_workers,
             ga=GAConfig(
                 pop_size=config.pop_size,
                 max_generations=config.max_generations,
@@ -235,6 +245,20 @@ def evaluate_scenario(
         ),
     )
 
+    try:
+        return _evaluate_with(analyzer, scenario, spec, config, context, t0)
+    finally:
+        analyzer.close()  # batch process pool, if one was spun up
+
+
+def _evaluate_with(
+    analyzer: StaticAnalyzer,
+    scenario,
+    spec: ScenarioSpec,
+    config: SweepConfig,
+    context: EvalContext,
+    t0: float,
+) -> ScenarioResult:
     # The Best Mapping archive doubles as GA seed material (Puzzle's search
     # space strictly contains the mapping-only space), so run the hillclimb
     # once and share it between the baseline and the GA's seed population.
@@ -252,23 +276,48 @@ def evaluate_scenario(
     alpha_star: Dict[str, float] = {}
     alpha_star_best: Dict[str, float] = {}
     best_solution: Dict[str, Solution] = {}
-    for method, sols in candidates.items():
-        sats = [analyzer.saturation(s).alpha_star for s in sols]
-        alpha_star[method] = percentile(sats, 50.0)
-        alpha_star_best[method] = min(sats)
-        best_solution[method] = sols[sats.index(min(sats))]
+    if config.use_batch:
+        # one batched bisection over the whole candidate population (all
+        # methods at once): every round's α probes run as one lock-step pass
+        flat = [(m, s) for m in METHODS for s in candidates[m]]
+        sat_results = analyzer.population_saturation([s for _, s in flat])
+        per_method: Dict[str, List[float]] = {m: [] for m in METHODS}
+        for (method, _), sat in zip(flat, sat_results):
+            per_method[method].append(sat.alpha_star)
+        for method, sats in per_method.items():
+            alpha_star[method] = percentile(sats, 50.0)
+            alpha_star_best[method] = min(sats)
+            best_solution[method] = candidates[method][sats.index(min(sats))]
+    else:
+        for method, sols in candidates.items():
+            sats = [analyzer.saturation(s).alpha_star for s in sols]
+            alpha_star[method] = percentile(sats, 50.0)
+            alpha_star_best[method] = min(sats)
+            best_solution[method] = sols[sats.index(min(sats))]
 
     satisfaction: Dict[str, float] = {}
     deadlines = [config.satisfaction_alpha * p for p in analyzer.base_periods]
-    for method, sol in best_solution.items():
-        res = analyzer.simulate(
-            sol, config.satisfaction_alpha, config.satisfaction_requests,
-            measured=True, seed=spec.seed, collect_tasks=False,
+    methods_order = list(best_solution)
+    if config.use_batch:
+        batch = analyzer.simulate_batch(
+            [(best_solution[m], config.satisfaction_alpha)
+             for m in methods_order],
+            config.satisfaction_requests, measured=True, seed=spec.seed,
         )
-        per_group: List[List[float]] = [[] for _ in range(scenario.num_groups)]
-        for r in res.requests:
-            per_group[r.group].append(r.makespan)
-        satisfaction[method] = deadline_satisfaction(per_group, deadlines)
+        for ix, method in enumerate(methods_order):
+            per_group = [batch.makespans(ix, g)
+                         for g in range(scenario.num_groups)]
+            satisfaction[method] = deadline_satisfaction(per_group, deadlines)
+    else:
+        for method, sol in best_solution.items():
+            res = analyzer.simulate(
+                sol, config.satisfaction_alpha, config.satisfaction_requests,
+                measured=True, seed=spec.seed, collect_tasks=False,
+            )
+            per_group = [[] for _ in range(scenario.num_groups)]
+            for r in res.requests:
+                per_group[r.group].append(r.makespan)
+            satisfaction[method] = deadline_satisfaction(per_group, deadlines)
 
     ratios = {
         m: capped_ratio(alpha_star[m], alpha_star["puzzle"], config.alpha_cap)

@@ -230,6 +230,12 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--min-generations", type=int, default=10)
     ap.add_argument("--bm-evals", type=int, default=120,
                     help="Best Mapping evaluation budget")
+    ap.add_argument("--use-batch", action="store_true",
+                    help="route α*-search + satisfaction sims through the "
+                         "generation-batched engine (identical results; "
+                         "see BENCH_simspeed.json for when it pays)")
+    ap.add_argument("--batch-workers", type=int, default=1,
+                    help="process shards per batched pass (with --use-batch)")
     args = ap.parse_args(argv)
     if args.scenarios < 1:
         ap.error("--scenarios must be >= 1")
@@ -244,6 +250,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         max_generations=args.max_generations,
         min_generations=args.min_generations,
         bm_max_evals=args.bm_evals,
+        use_batch=args.use_batch,
+        batch_workers=args.batch_workers,
     )
     run_dir = args.run_dir or f"results/sweep_s{args.seed}_n{args.scenarios}"
 

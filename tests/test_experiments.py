@@ -208,6 +208,24 @@ def test_sweep_resume_and_worker_determinism(tmp_path):
     assert _strip_wall(doc3) == _strip_wall(doc1)
 
 
+def test_evaluate_scenario_batch_path_identical():
+    """use_batch routes α*-search + satisfaction through batchsim; the
+    per-scenario result must be bit-identical (wall time aside)."""
+    from repro.experiments.evaluate import evaluate_scenario
+
+    spec = generate_scenario_specs(2, seed=2025)[1]
+    kw = dict(pop_size=8, max_generations=4, min_generations=2,
+              bm_max_evals=24)
+    plain = evaluate_scenario(spec, SweepConfig(**kw)).to_json()
+    batched = evaluate_scenario(
+        spec, SweepConfig(use_batch=True, **kw)).to_json()
+    plain.pop("wall_s")
+    batched.pop("wall_s")
+    # the configs differ by construction; everything else must not
+    assert plain.pop("spec") == batched.pop("spec")
+    assert plain == batched
+
+
 def test_sweep_rejects_config_mismatch(tmp_path):
     specs = generate_scenario_specs(1, seed=1)
     run_sweep(specs, TINY, run_dir=str(tmp_path), workers=1)

@@ -1,0 +1,207 @@
+"""Golden-trace regression: canonical task traces for three fixed scenarios.
+
+``tests/golden/*.json`` holds the reference :class:`SimResult` — the exact
+task ordering (release/start/finish times, costs, placements), request
+records, busy times and horizon — produced by the reference DES at a fixed
+seed. Every engine (RuntimeSimulator, FastSimulator, BatchSimulator) must
+reproduce it *bit for bit*: any silent semantic drift in dispatch order,
+tie-breaking, cost arithmetic or the noise stream fails loudly here even if
+the engines still agree with each other.
+
+Regenerate (after an intentional semantic change) with::
+
+    PYTHONPATH=src python tests/test_golden_traces.py --regen
+
+and review the diff — a regeneration that changes values is a semantics
+change and must be called out in the PR.
+"""
+import json
+import math
+import os
+import random
+import sys
+
+import pytest
+
+from repro.core import (
+    BatchLane,
+    BatchSimulator,
+    FastSimulator,
+    NoiseModel,
+    PAPER_COMM_MODEL,
+    Profiler,
+    RuntimeSimulator,
+    SolutionFactory,
+    branching_graph,
+    build_spec,
+    chain_graph,
+    decode_solution,
+    mobile_processors,
+)
+from repro.core.profiler import AnalyticMobileBackend
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+
+PROCS = mobile_processors()
+PROFILER = Profiler(AnalyticMobileBackend(PROCS))
+
+
+def _nets_tri_chain():
+    return [
+        chain_graph("alpha", [("conv", 4e6, 1000, 4000)] * 4),
+        chain_graph("beta", [("fc", 8e6, 2000, 8000)] * 3),
+        chain_graph("gamma", [("dw", 1.5e6, 600, 1800)] * 5),
+    ]
+
+
+def _nets_diamond_mix():
+    return [
+        chain_graph("a", [("conv", 4e6, 1000, 4000)] * 5),
+        branching_graph("b", [("conv", 2e6, 800, 2000)] * 4,
+                        [(0, 1), (0, 2), (1, 3), (2, 3)]),
+        chain_graph("c", [("fc", 8e6, 2000, 8000)] * 3),
+        branching_graph("d", [("conv", 3e6, 500, 1500)] * 5,
+                        [(0, 1), (0, 2), (1, 3), (2, 3), (3, 4)]),
+    ]
+
+
+def _solution(nets, seed, cut_prob=0.35, pin=None):
+    fac = SolutionFactory(nets, num_processors=len(PROCS),
+                          rng=random.Random(seed), cut_prob=cut_prob)
+    if pin is not None:
+        # everything cut apart but mapped to one processor: maximal queueing
+        sol = fac.random_solution()
+        sol.partition = [[1] * g.num_edges for g in nets]
+        sol.mapping = [[pin] * g.num_layers for g in nets]
+        return sol
+    return fac.random_solution()
+
+
+#: name -> (nets, groups, periods, num_requests, noise seed, dispatch, pin)
+SCENARIOS = {
+    "tri_chain_clean": (
+        _nets_tri_chain, [[0, 1, 2]], [0.005], 8, None, 0.0, None),
+    "diamond_mix_measured": (
+        _nets_diamond_mix, [[0, 1], [2, 3]], [0.004, 0.006], 6, 7, 150e-6,
+        None),
+    "diamond_mix_overload": (
+        _nets_diamond_mix, [[0, 1], [2, 3]], [2e-6, 2e-6], 30, None, 0.0, 0),
+}
+
+
+def _run_reference(name):
+    nets_fn, groups, periods, nr, noise_seed, dispatch, pin = SCENARIOS[name]
+    nets = nets_fn()
+    sol = _solution(nets, seed=11, pin=pin)
+    placed = decode_solution(sol, nets)
+    noise = NoiseModel(seed=noise_seed) if noise_seed is not None else None
+    res = RuntimeSimulator(
+        placed=placed, processors=PROCS, profiler=PROFILER,
+        comm_model=PAPER_COMM_MODEL, groups=groups, periods=periods,
+        num_requests=nr, noise=noise, dispatch_overhead=dispatch,
+    ).run()
+    return nets, sol, groups, periods, nr, noise, dispatch, res
+
+
+def _serialize(res):
+    return {
+        "horizon": res.horizon,
+        "busy_time": {str(pid): t for pid, t in sorted(res.busy_time.items())},
+        "requests": [
+            [r.group, r.request, r.arrival, r.first_start, r.last_finish,
+             r.done_tasks, r.total_tasks]
+            for r in res.requests
+        ],
+        "makespans": [
+            None if math.isinf(r.makespan) else r.makespan
+            for r in res.requests
+        ],
+        "tasks": [
+            [t.group, t.request, t.network, t.sg_index, t.processor,
+             t.released, t.started, t.finished,
+             t.comm_time, t.quant_time, t.exec_time]
+            for t in res.tasks
+        ],
+    }
+
+
+def _assert_matches_golden(res, golden, engine):
+    got = _serialize(res)
+    assert got["horizon"] == golden["horizon"], engine
+    assert got["busy_time"] == golden["busy_time"], engine
+    assert len(got["requests"]) == len(golden["requests"]), engine
+    for g, w in zip(got["requests"], golden["requests"]):
+        assert g == w, (engine, "request", g, w)
+    assert got["makespans"] == golden["makespans"], engine
+    assert len(got["tasks"]) == len(golden["tasks"]), (
+        engine, len(got["tasks"]), len(golden["tasks"]))
+    for i, (g, w) in enumerate(zip(got["tasks"], golden["tasks"])):
+        assert g == w, (engine, "task", i, g, w)
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_golden_trace(name):
+    path = os.path.join(GOLDEN_DIR, f"{name}.json")
+    assert os.path.exists(path), (
+        f"missing golden file {path}; regenerate with "
+        f"`PYTHONPATH=src python tests/test_golden_traces.py --regen`")
+    with open(path) as f:
+        golden = json.load(f)
+    nets, sol, groups, periods, nr, noise, dispatch, ref = _run_reference(name)
+
+    _assert_matches_golden(ref, golden, "reference-des")
+
+    spec = build_spec(decode_solution(sol, nets), PROCS, PROFILER,
+                      PAPER_COMM_MODEL)
+    fast = FastSimulator(
+        spec, groups=groups, periods=periods, num_requests=nr,
+        noise=noise, dispatch_overhead=dispatch,
+    ).run(collect_tasks=True)
+    _assert_matches_golden(fast, golden, "fastsim")
+
+    batch = BatchSimulator(
+        [BatchLane(spec=spec, periods=periods, num_requests=nr,
+                   noise=noise, dispatch_overhead=dispatch)],
+        groups, PROCS,
+    ).run(collect_tasks=True)
+    _assert_matches_golden(batch.result(0), golden, "batchsim")
+
+
+def test_golden_traces_have_interesting_structure():
+    """The committed traces must exercise the semantics they guard."""
+    with open(os.path.join(GOLDEN_DIR, "diamond_mix_measured.json")) as f:
+        measured = json.load(f)
+    # noise applied: exec times differ across requests of the same task
+    execs = {}
+    varied = False
+    for g, r, net, k, pid, rel, st_, fin, cm, qt, ex in measured["tasks"]:
+        key = (net, k)
+        if key in execs and execs[key] != ex:
+            varied = True
+        execs[key] = ex
+    assert varied, "measured trace shows no run-to-run exec variance"
+    with open(os.path.join(GOLDEN_DIR, "diamond_mix_overload.json")) as f:
+        overload = json.load(f)
+    assert any(m is None for m in overload["makespans"]), (
+        "overload trace dropped no requests")
+    assert any(m is not None for m in overload["makespans"])
+
+
+def regenerate():
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    for name in sorted(SCENARIOS):
+        *_, res = _run_reference(name)
+        path = os.path.join(GOLDEN_DIR, f"{name}.json")
+        doc = _serialize(res)
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=1)
+            f.write("\n")
+        print(f"wrote {path}: {len(doc['tasks'])} tasks, "
+              f"{len(doc['requests'])} requests")
+
+
+if __name__ == "__main__":
+    if "--regen" in sys.argv:
+        regenerate()
+    else:
+        print(__doc__)
