@@ -15,6 +15,10 @@ Prints ``name,us_per_call,derived`` CSV rows. Sections:
              and an end-to-end GA + saturation speedup on a deterministic
              3-group scenario (with a makespan-parity check). ``--json``
              additionally writes BENCH_simspeed.json for regression tracking.
+* conformance — device-in-the-loop tier: replays schedules on the
+            virtual-clock PuzzleRuntime and diffs task traces against the
+            FastSimulator at zero tolerance (asserted), reporting µs/replay
+            for both sides.
 * sweep   — randomized scenario-sweep harness (repro.experiments): per-
             scenario α* for Puzzle / Best Mapping / NPU Only and the
             aggregate frequency-gain ratios (paper §6, Fig. 11).
@@ -486,6 +490,60 @@ def bench_simspeed(args) -> None:
         emit("simspeed.json", 0.0, os.path.abspath(out))
 
 
+def bench_conformance(args) -> None:
+    """Runtime↔simulator conformance: zero-diff assertion + replay cost.
+
+    Replays deterministic schedules of a 2-group scenario on the
+    virtual-clock PuzzleRuntime (the device-in-the-loop tier's exact-replay
+    mode) and diffs release/start/finish timestamps and makespans against
+    FastSimulator under measured (noise + dispatch) conditions. The diff
+    must be zero; the emitted rows compare the per-replay cost of the two
+    tiers.
+    """
+    import random as _random
+
+    from repro.core import SolutionFactory
+
+    an = _analyzer([["face_det", "selfie_seg"], ["yolov8n", "fast_scnn"]],
+                   name="conformance", seed=0)
+    fac = SolutionFactory(an.scenario.graphs, num_processors=3,
+                          rng=_random.Random(7))
+    solutions = [fac.random_solution() for _ in range(4)]
+    nr = 12 if getattr(args, "smoke", False) else 24
+
+    reports = []
+    t0 = time.perf_counter()
+    for sol in solutions:
+        reports.append(an.validate_on_runtime(
+            sol, alpha=1.0, num_requests=nr, measured=True, seed=0))
+    t_validate = (time.perf_counter() - t0) / len(solutions)
+    assert all(r.passed for r in reports), "virtual runtime diverged"
+    max_diff = max(max(r.max_release_diff, r.max_start_diff,
+                       r.max_finish_diff, r.max_makespan_diff)
+                   for r in reports)
+    tasks = sum(r.runtime_tasks for r in reports)
+
+    # replay-cost split: simulator vs virtual-clock runtime on the same spec
+    t0 = time.perf_counter()
+    for sol in solutions:
+        an.simulate(sol, 1.0, nr, measured=True, collect_tasks=True)
+    t_sim = (time.perf_counter() - t0) / len(solutions)
+    from repro.runtime.conformance import run_virtual_schedule
+    t0 = time.perf_counter()
+    for sol in solutions:
+        run_virtual_schedule(
+            an.scenario.graphs, sol, an.processors, an.solution_spec(sol),
+            an.scenario.groups, an.base_periods, nr,
+            noise=an.cfg.noise, dispatch_overhead=an.cfg.dispatch_overhead)
+    t_rt = (time.perf_counter() - t0) / len(solutions)
+
+    emit("conformance.zero_diff", t_validate * 1e6,
+         f"ok=True;max_abs_diff={max_diff};tasks={tasks}")
+    emit("conformance.fastsim_replay", t_sim * 1e6, f"requests={nr}")
+    emit("conformance.virtual_runtime_replay", t_rt * 1e6,
+         f"overhead=x{t_rt / t_sim:.2f} vs fastsim")
+
+
 def bench_sweep(args) -> None:
     """Scenario-sweep harness smoke/regression: per-scenario α* + aggregates.
 
@@ -600,6 +658,7 @@ SECTIONS = {
     "fig15": bench_fig15,
     "table5": bench_table5,
     "simspeed": bench_simspeed,
+    "conformance": bench_conformance,
     "sweep": bench_sweep,
     "roofline": bench_roofline,
     "kernels": bench_kernels,

@@ -66,6 +66,12 @@ class AnalyzerConfig:
     # GA routes its generation evaluations through the batch path when
     # ``ga.batch_eval`` is set.
     batch_workers: int = 1
+    # Device-in-the-loop measurement rounds (used when the analyzer holds
+    # executables and ga.device_in_loop_interval > 0): how many of the
+    # front's candidates are executed for real per round, and with how many
+    # requests per group — the paper's "brief on-target execution".
+    device_in_loop_topk: int = 1
+    device_in_loop_requests: int = 3
 
 
 class StaticAnalyzer:
@@ -76,12 +82,16 @@ class StaticAnalyzer:
         profiler: Profiler,
         comm_model: PiecewiseLinearCommModel,
         config: Optional[AnalyzerConfig] = None,
+        executables: Optional[Dict] = None,
     ):
         self.scenario = scenario
         self.processors = processors
         self.profiler = profiler
         self.comm = comm_model
         self.cfg = config or AnalyzerConfig()
+        # real executables (zoo models) enable the device-in-the-loop paths:
+        # real-exec conformance validation and measured-cost GA feedback
+        self.executables = executables
         self.best_times = best_model_times(scenario.graphs, processors, profiler)
         self.base_periods = base_periods(scenario, self.best_times)
         self.factory = SolutionFactory(
@@ -438,6 +448,161 @@ class StaticAnalyzer:
             pending = nxt
         return [results[ix] for ix in range(len(solutions))]
 
+    # -- device-in-the-loop ---------------------------------------------------
+    def validate_on_runtime(
+        self,
+        solution: Solution,
+        alpha: float = 1.0,
+        num_requests: Optional[int] = None,
+        measured: bool = False,
+        seed: int = 0,
+        mode: str = "virtual",
+        executables: Optional[Dict] = None,
+        rel_tol: float = 0.35,
+    ):
+        """Execute ``solution`` on :class:`~repro.runtime.PuzzleRuntime` and
+        diff its task trace against the simulator's prediction.
+
+        Returns a :class:`~repro.runtime.conformance.ConformanceReport`
+        whose traces use the golden-trace schema (``tests/golden/``).
+
+        ``mode="virtual"`` replays this analyzer's own cost spec on the
+        runtime's virtual clock — the comparison is at **zero tolerance**
+        (identical ordering and timestamps; ``measured`` adds the same
+        noise stream and dispatch load to both sides). ``mode="real"``
+        genuinely executes the models (``executables`` or the analyzer's
+        own) under wall-clock timing and checks per-request makespans
+        within ``rel_tol`` relative error.
+        """
+        from ..runtime import PuzzleRuntime  # lazy: runtime pulls in jax
+        from ..runtime.conformance import (
+            build_report, run_virtual_schedule, runtime_result,
+        )
+
+        num_requests = num_requests or self.cfg.fast_requests
+        periods = [alpha * p for p in self.base_periods]
+        sim = self.simulate(
+            solution, alpha, num_requests, measured=measured, seed=seed,
+            engine="fast", collect_tasks=True,
+        )
+        if mode == "virtual":
+            noise = (NoiseModel(self.cfg.noise.sigma_by_kind, seed=seed)
+                     if measured else None)
+            rt_res = run_virtual_schedule(
+                self.scenario.graphs, solution, self.processors,
+                self.solution_spec(solution), self.scenario.groups, periods,
+                num_requests, noise=noise,
+                dispatch_overhead=(self.cfg.dispatch_overhead
+                                   if measured else 0.0),
+                dispatch_pid=self.cfg.dispatch_pid,
+            )
+            return build_report("virtual", rt_res, sim, rel_tol=0.0)
+        if mode != "real":
+            raise ValueError(f"unknown conformance mode {mode!r}")
+        executables = executables if executables is not None else self.executables
+        if executables is None:
+            raise ValueError("real-exec conformance needs executables")
+        with PuzzleRuntime(self.scenario.graphs, solution, self.processors,
+                           executables) as rt:
+            states = rt.run_periodic(
+                [list(g) for g in self.scenario.groups], periods,
+                num_requests=num_requests,
+            )
+            rt_res = runtime_result(rt, states, periods, num_requests,
+                                    rebase=True)
+        return build_report("real", rt_res, sim, rel_tol=rel_tol)
+
+    def measure_on_runtime(
+        self,
+        solution: Solution,
+        executables: Optional[Dict] = None,
+        num_requests: Optional[int] = None,
+        alpha: float = 1.0,
+    ) -> Dict[str, float]:
+        """Brief on-target execution of ``solution``: run the schedule for
+        real and return median measured exec time per Merkle profile key."""
+        from ..runtime import PuzzleRuntime  # lazy: runtime pulls in jax
+
+        executables = executables if executables is not None else self.executables
+        if executables is None:
+            raise ValueError("measure_on_runtime needs executables")
+        num_requests = num_requests or self.cfg.device_in_loop_requests
+        with PuzzleRuntime(self.scenario.graphs, solution, self.processors,
+                           executables) as rt:
+            rt.run_periodic(
+                [list(g) for g in self.scenario.groups],
+                [alpha * p for p in self.base_periods],
+                num_requests=num_requests,
+            )
+            return rt.measured_costs()
+
+    def apply_measured_costs(
+        self,
+        measurements: Dict[str, float],
+        rel_tol: float = 0.05,
+    ) -> int:
+        """Write measured per-subgraph timings into the ProfileDB and
+        invalidate every evaluation cache derived from the affected keys.
+
+        Measurements within ``rel_tol`` relative distance of the stored
+        value are treated as statistically unchanged (wall-clock medians
+        never repeat exactly) and skipped entirely, so repeated
+        device-in-the-loop rounds on a stable device keep every cache warm
+        instead of thrashing them on timing jitter. Returns the number of
+        profile entries that actually changed; when non-zero, the
+        SpecBuilder's exec memo drops exactly the affected keys (plus the
+        derived per-network cost entries), and the analyzer's
+        spec/objective caches are flushed — they key on solution
+        identity/spec content, either of which may now map to different
+        costs.
+        """
+        changed: List[str] = []
+        for key, t in measurements.items():
+            old = self.profiler.db.get(key)
+            if old is not None and old > 0 and abs(t - old) <= rel_tol * old:
+                continue
+            if self.profiler.db.update(key, t):
+                changed.append(key)
+        if changed:
+            self._spec_builder.invalidate(changed)
+            self._spec_cache.clear()
+            self._objective_cache.clear()
+        return len(changed)
+
+    def rerank_pareto(
+        self,
+        solutions: Sequence[Solution],
+        num_requests: Optional[int] = None,
+    ) -> List[Solution]:
+        """Re-evaluate candidates on current (e.g. freshly measured) costs
+        and return the new first front, refreshing ``fitness`` in place."""
+        from .nsga import fast_non_dominated_sort
+
+        objs = [
+            self.objectives(
+                s, num_requests=num_requests or self.cfg.accurate_requests,
+                measured=True,
+            )
+            for s in solutions
+        ]
+        for s, o in zip(solutions, objs):
+            s.fitness = o
+        front0 = fast_non_dominated_sort([list(o) for o in objs])[0]
+        return [solutions[i] for i in front0]
+
+    def _device_in_loop(self, solutions: Sequence[Solution]) -> int:
+        """GA measurement round: execute the front's best candidates on the
+        real runtime and feed the measured costs back. Returns the number of
+        changed profile entries (the GA re-ranks when non-zero)."""
+        ranked = sorted(
+            solutions,
+            key=lambda s: sum(s.fitness) if s.fitness else float("inf"),
+        )
+        changed = 0
+        for sol in ranked[: max(1, self.cfg.device_in_loop_topk)]:
+            changed += self.apply_measured_costs(self.measure_on_runtime(sol))
+        return changed
+
     # -- search ------------------------------------------------------------
     def run_ga(self, seeds: Sequence[Solution] = ()) -> GAResult:
         scheduler = GeneticScheduler(
@@ -463,6 +628,15 @@ class StaticAnalyzer:
                 measured=accurate,
             ),
             config=self.cfg.ga,
+            # Device-in-the-loop measurement rounds (only when this analyzer
+            # holds real executables): brief on-target execution of the
+            # front, ProfileDB write-back, cache invalidation, re-rank.
+            measure_device=(
+                self._device_in_loop
+                if self.executables is not None
+                and self.cfg.ga.device_in_loop_interval > 0
+                else None
+            ),
         )
         default_seeds = list(seeds)
         if not default_seeds:

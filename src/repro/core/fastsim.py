@@ -211,6 +211,9 @@ class SpecBuilder:
             {} for _ in self.graphs
         ]
         self._exec: Dict[Tuple, float] = {}
+        # content exec-key -> Merkle profile key, so device-in-the-loop
+        # ProfileDB updates can invalidate exactly the affected memo entries
+        self._exec_profile_key: Dict[Tuple, str] = {}
         # per-network decode+cost cache: one network's placed subgraphs and
         # cost vectors depend only on its own genes (+ priority rank), so
         # they are reusable across the many solutions that share them.
@@ -313,14 +316,19 @@ class SpecBuilder:
         succ_flat: List[int] = []
         one_net = [placed_net]  # subgraph_task_costs only reads placed[net]
         for k, p in enumerate(placed_net):
+            # content key: the same layer set under the same execution
+            # config costs the same across partitions and solutions
+            exec_key = (gkey, p.subgraph.layer_ids, p.processor,
+                        p.dtype, p.backend)
+            if exec_key not in self._exec_profile_key:
+                # merkle_hash memoizes on the (shared) Subgraph instance,
+                # so this is a dict hit on all but the first computation
+                self._exec_profile_key[exec_key] = p.profile_key()
             c, q, x = subgraph_task_costs(
                 one_net, 0, k, owner, bool(deps[k]),
                 self.profiler, self.comm_model, self.input_home_pid,
                 exec_cache=self._exec,
-                # content key: the same layer set under the same execution
-                # config costs the same across partitions and solutions
-                exec_key=(gkey, p.subgraph.layer_ids, p.processor,
-                          p.dtype, p.backend),
+                exec_key=exec_key,
                 in_cut=in_cuts[k],
             )
             comm.append(c)
@@ -334,6 +342,35 @@ class SpecBuilder:
             comm, quant, exec_,
         )
         return ent
+
+    def invalidate(self, profile_keys: Optional[Sequence[str]] = None) -> int:
+        """Drop cost memos stale after a ProfileDB change; returns how many
+        exec-cache entries were dropped.
+
+        With ``profile_keys`` only the exec memo entries whose Merkle
+        profile key is affected are evicted (the map recorded at memo-fill
+        time makes this exact); ``None`` evicts everything. The per-network
+        decode+cost entries embed exec times, so they are cleared wholesale
+        either way — they rebuild from the surviving partition/vote/exec
+        caches on the next ``build``. Structure caches (partitions, votes)
+        are cost-independent and always survive.
+        """
+        if profile_keys is None:
+            dropped = len(self._exec)
+            self._exec.clear()
+            self._exec_profile_key.clear()
+        else:
+            keys = set(profile_keys)
+            stale = [ek for ek, pk in self._exec_profile_key.items()
+                     if pk in keys]
+            dropped = 0
+            for ek in stale:
+                del self._exec_profile_key[ek]
+                if self._exec.pop(ek, None) is not None:
+                    dropped += 1
+        for cache in self._net_cache:
+            cache.clear()
+        return dropped
 
     def build(self, sol) -> FastSimSpec:
         prio_rank = {n: r for r, n in enumerate(sol.priority)}

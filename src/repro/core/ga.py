@@ -49,6 +49,14 @@ class GAConfig:
     # engine is bit-exact; enforced by tests/test_ga_determinism.py); only
     # wall-clock and the evaluation counter's cache interleaving differ.
     batch_eval: bool = False
+    # Device-in-the-loop feedback (paper §4.2/§5): every N generations the
+    # scheduler hands the current Pareto front to ``measure_device``, which
+    # executes candidates on the real runtime, writes measured per-subgraph
+    # timings back into the ProfileDB and invalidates the evaluation caches
+    # (StaticAnalyzer.apply_measured_costs). When measurements changed any
+    # profile entry, the fitness memo is flushed and the whole population is
+    # re-evaluated — the search continues on measured costs. 0 disables.
+    device_in_loop_interval: int = 0
 
 
 @dataclass
@@ -58,6 +66,9 @@ class GAResult:
     generations: int
     evaluations: int
     oracle_drift: List[Tuple[int, float]] = field(default_factory=list)
+    # (generation, changed-profile-entry count) per device-in-the-loop
+    # measurement round that actually updated the ProfileDB
+    device_updates: List[Tuple[int, int]] = field(default_factory=list)
 
 
 def _dominates(a: Objective, b: Objective) -> bool:
@@ -73,12 +84,14 @@ class GeneticScheduler:
         config: Optional[GAConfig] = None,
         evaluate_oracle: Optional[EvalFn] = None,
         evaluate_batch: Optional[BatchEvalFn] = None,
+        measure_device: Optional[Callable[[Sequence[Solution]], int]] = None,
     ):
         self.factory = factory
         self.evaluate_fast = evaluate_fast
         self.evaluate_accurate = evaluate_accurate or evaluate_fast
         self.evaluate_oracle = evaluate_oracle
         self.evaluate_batch = evaluate_batch
+        self.measure_device = measure_device
         self.cfg = config or GAConfig()
         self.rng = random.Random(self.cfg.seed)
         self.evaluations = 0
@@ -175,6 +188,7 @@ class GeneticScheduler:
 
         history: List[float] = []
         oracle_drift: List[Tuple[int, float]] = []
+        device_updates: List[Tuple[int, int]] = []
         stale = 0
         best_avg = float("inf")
         gen = 0
@@ -214,6 +228,22 @@ class GeneticScheduler:
                                 vectorized=cfg.vectorized_nsga)
             pop = [combined[i] for i in keep]
 
+            if (
+                self.measure_device is not None
+                and cfg.device_in_loop_interval > 0
+                and gen % cfg.device_in_loop_interval == 0
+            ):
+                # brief on-target execution of the Pareto candidates: feed
+                # measured costs back, then re-rank everything on them
+                fits = [list(s.fitness) for s in pop]
+                front0 = fast_non_dominated_sort(
+                    fits, vectorized=cfg.vectorized_nsga)[0]
+                changed = self.measure_device([pop[i] for i in front0])
+                if changed:
+                    device_updates.append((gen, changed))
+                    self._cache.clear()
+                    for s, obj in zip(pop, self._eval_generation(pop)):
+                        s.fitness = obj
             avg = sum(sum(s.fitness) for s in pop) / len(pop)
             history.append(avg)
             if (
@@ -251,4 +281,5 @@ class GeneticScheduler:
         return GAResult(
             pareto=pareto, history=history, generations=gen,
             evaluations=self.evaluations, oracle_drift=oracle_drift,
+            device_updates=device_updates,
         )

@@ -42,6 +42,7 @@ class ProfileDB:
         self._data: Dict[str, float] = {}
         self.hits = 0
         self.misses = 0
+        self.measured_updates = 0
         if path and os.path.exists(path):
             with open(path) as f:
                 self._data = json.load(f)
@@ -55,6 +56,19 @@ class ProfileDB:
     def put(self, key: str, value: float) -> None:
         self.misses += 1
         self._data[key] = value
+
+    def update(self, key: str, value: float) -> bool:
+        """Overwrite a profile entry with a *measured* value (the
+        device-in-the-loop feedback path); returns True when the stored
+        value actually changed. Callers that depend on cached derivations
+        of this entry (spec/objective caches) must invalidate them —
+        ``StaticAnalyzer.apply_measured_costs`` does both."""
+        old = self._data.get(key)
+        self._data[key] = value
+        changed = old is None or old != value
+        if changed:
+            self.measured_updates += 1
+        return changed
 
     def save(self) -> None:
         if self.path:

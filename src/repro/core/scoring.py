@@ -95,7 +95,9 @@ def deadline_satisfaction(
     for ms, dl in zip(per_group_makespans, per_group_deadlines):
         for m in ms:
             total += 1
-            if m <= dl:
+            # the isinf guard matters only for an infinite deadline, where
+            # `inf <= inf` would count a dropped request as a hit
+            if m <= dl and not math.isinf(m):
                 ok += 1
     return ok / total if total else 0.0
 

@@ -74,6 +74,12 @@ class SweepConfig:
     # default stays off — see BENCH_simspeed.json's batch section.
     use_batch: bool = False
     batch_workers: int = 1
+    # Device-in-the-loop conformance: after picking Puzzle's best schedule,
+    # execute it on the virtual-clock PuzzleRuntime and diff the task trace
+    # against the simulator at zero tolerance; the scalar diff summary lands
+    # in ``ScenarioResult.runtime_conformance``. Adds one runtime replay per
+    # scenario (~ms); results are otherwise unchanged.
+    validate_runtime: bool = False
 
     def to_json(self) -> Dict[str, object]:
         return asdict(self)
@@ -144,6 +150,9 @@ class ScenarioResult:
     ga_evaluations: int
     pareto_size: int
     wall_s: float
+    # scalar summary of the runtime↔simulator conformance check (only when
+    # SweepConfig.validate_runtime; see ConformanceReport.summary())
+    runtime_conformance: Optional[Dict[str, object]] = None
 
     def __post_init__(self) -> None:
         # NaN has no JSON representation and poisons every downstream
@@ -181,6 +190,8 @@ class ScenarioResult:
             "ga_evaluations": self.ga_evaluations,
             "pareto_size": self.pareto_size,
             "wall_s": self.wall_s,
+            **({"runtime_conformance": dict(self.runtime_conformance)}
+               if self.runtime_conformance is not None else {}),
         }
 
     @classmethod
@@ -202,6 +213,7 @@ class ScenarioResult:
             ga_evaluations=int(d["ga_evaluations"]),
             pareto_size=int(d["pareto_size"]),
             wall_s=float(d["wall_s"]),
+            runtime_conformance=d.get("runtime_conformance"),
         )
 
 
@@ -324,6 +336,18 @@ def _evaluate_with(
         for m in ("npu_only", "best_mapping")
     }
 
+    conformance = None
+    if config.validate_runtime:
+        # execute Puzzle's chosen schedule on the virtual-clock runtime under
+        # the same measured conditions as the satisfaction check; the diff
+        # against the simulator must be exact (report.passed)
+        report = analyzer.validate_on_runtime(
+            best_solution["puzzle"], alpha=config.satisfaction_alpha,
+            num_requests=config.satisfaction_requests, measured=True,
+            seed=spec.seed,
+        )
+        conformance = report.summary()
+
     return ScenarioResult(
         spec=spec,
         base_periods_s=list(analyzer.base_periods),
@@ -335,4 +359,5 @@ def _evaluate_with(
         ga_evaluations=ga.evaluations,
         pareto_size=len(ga.pareto),
         wall_s=time.perf_counter() - t0,
+        runtime_conformance=conformance,
     )

@@ -236,6 +236,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                          "see BENCH_simspeed.json for when it pays)")
     ap.add_argument("--batch-workers", type=int, default=1,
                     help="process shards per batched pass (with --use-batch)")
+    ap.add_argument("--validate-runtime", action="store_true",
+                    help="replay each scenario's best Puzzle schedule on the "
+                         "virtual-clock PuzzleRuntime and record the "
+                         "zero-tolerance trace diff vs the simulator")
     args = ap.parse_args(argv)
     if args.scenarios < 1:
         ap.error("--scenarios must be >= 1")
@@ -252,6 +256,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         bm_max_evals=args.bm_evals,
         use_batch=args.use_batch,
         batch_workers=args.batch_workers,
+        validate_runtime=args.validate_runtime,
     )
     run_dir = args.run_dir or f"results/sweep_s{args.seed}_n{args.scenarios}"
 

@@ -1,8 +1,17 @@
-"""Puzzle Runtime: Coordinator / Workers / Engines + memory optimizations."""
+"""Puzzle Runtime: Coordinator / Workers / Engines + memory optimizations,
+plus the virtual-clock conformance tier and measured-cost extraction."""
+from .clock import SimCostSource, VirtualClock, WallClock
+from .conformance import (
+    ConformanceReport,
+    build_report,
+    run_virtual_schedule,
+    runtime_result,
+    serialize_result,
+)
 from .coordinator import Coordinator, RequestState
 from .engine import ENGINE_REGISTRY, EagerEngine, Engine, FastMathJitEngine, JitEngine, make_engine
 from .runtime import PuzzleRuntime, RuntimeConfig
 from .tensorpool import CHUNK, SharedBufferTransport, TensorPool
-from .worker import Worker
+from .worker import DISPATCH_TOKEN, Worker
 
 __all__ = [k for k in dir() if not k.startswith("_")]

@@ -4,17 +4,29 @@ Workflow: ① client request enters the queue → ② the coordinator finds
 subgraphs with resolved dependencies → ③ tasks go to Worker queues →
 ④ Workers (de)quantize + execute → ⑤ results update request state →
 ⑥ the final result returns to the client (a Future).
+
+All timestamps come from an injectable clock (wall time by default, a
+:class:`~repro.runtime.clock.VirtualClock` in conformance mode), and every
+released task gets a :class:`~repro.core.simulator.TaskRecord` appended to
+``self.trace`` in release order — the same schema and ordering the
+simulators produce, so a runtime execution diffs directly against a
+simulated one. In virtual mode the Coordinator also mirrors the
+simulators' queueing keys exactly: tasks enter Worker stores with priority
+``(0, network-priority, release-seq)`` and, when dispatch overhead is
+modeled, a ``(-1, 0, release-seq)`` dispatch token is pushed to the
+dispatch processor *before* each release (paper §6.3's Coordinator load).
 """
 from __future__ import annotations
 
 import threading
-import time
 from concurrent.futures import Future
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from ..core.chromosome import PlacedSubgraph
-from .worker import Worker
+from ..core.simulator import TaskRecord
+from .clock import WallClock
+from .worker import DISPATCH_TOKEN, Worker
 
 
 @dataclass
@@ -25,11 +37,18 @@ class RequestState:
     submitted: float
     future: Future = field(default_factory=Future)
     remaining: int = 0
+    total_tasks: int = 0
+    group_request: int = 0            # per-group request index (rid)
     outputs: Dict[Tuple[int, int], Any] = field(default_factory=dict)
     pending_deps: Dict[Tuple[int, int], int] = field(default_factory=dict)
     first_start: Optional[float] = None
+    last_finish: float = 0.0
     finish: Optional[float] = None
     task_records: List[Dict] = field(default_factory=list)
+
+    @property
+    def done_tasks(self) -> int:
+        return self.total_tasks - self.remaining
 
     @property
     def makespan(self) -> Optional[float]:
@@ -46,14 +65,24 @@ class Coordinator:
         placed: Sequence[Sequence[PlacedSubgraph]],
         workers: Dict[int, Worker],
         executables: Dict[str, Any],
+        clock=None,
+        virtual: bool = False,
+        dispatch_overhead: float = 0.0,
+        dispatch_pid: int = 0,
     ):
         self.placed = placed
         self.workers = workers
         self.executables = executables
+        self.clock = clock if clock is not None else WallClock()
+        self.virtual = virtual
+        self.dispatch_overhead = dispatch_overhead
+        self.dispatch_pid = dispatch_pid
         self._lock = threading.Lock()
         self._requests: Dict[int, RequestState] = {}
         self._next_id = 0
-        self._seq = 0
+        self._seq = 0                      # release sequence (queue keys)
+        self._group_counts: Dict[int, int] = {}
+        self.trace: List[TaskRecord] = []  # all released tasks, release order
         # static dependency structure + engine pre-loading (Initialization)
         self._deps: List[List[List[int]]] = []
         self._succs: List[List[List[int]]] = []
@@ -72,22 +101,26 @@ class Coordinator:
             self._deps.append(deps)
             self._succs.append(succs)
             self._owner.append(owner)
-        for plist in placed:
-            for p in plist:
-                w = workers[p.processor]
-                eng = w.engines[p.backend]
-                eng.load(p, executables)
+        if not virtual:  # virtual mode replays costs; nothing to compile
+            for plist in placed:
+                for p in plist:
+                    w = workers[p.processor]
+                    eng = w.engines[p.backend]
+                    eng.load(p, executables)
 
     # -- client API ------------------------------------------------------------
     def submit(self, networks: Sequence[int], group: int = 0) -> RequestState:
         with self._lock:
             rid = self._next_id
             self._next_id += 1
+            grid = self._group_counts.get(group, 0)
+            self._group_counts[group] = grid + 1
             st = RequestState(
                 request_id=rid, group=group, networks=list(networks),
-                submitted=time.perf_counter(),
+                submitted=self.clock.now(), group_request=grid,
             )
             st.remaining = sum(len(self.placed[n]) for n in networks)
+            st.total_tasks = st.remaining
             for n in networks:
                 for k, d in enumerate(self._deps[n]):
                     st.pending_deps[(n, k)] = len(d)
@@ -98,11 +131,22 @@ class Coordinator:
                     self._dispatch(st, n, k)
         return st
 
+    def cancel_pending(self, reason: str = "PuzzleRuntime closed") -> int:
+        """Fail every unfinished request's future; returns how many."""
+        cancelled = 0
+        with self._lock:
+            states = list(self._requests.values())
+        for st in states:
+            if not st.future.done():
+                st.future.set_exception(RuntimeError(reason))
+                cancelled += 1
+        return cancelled
+
     # -- internal -----------------------------------------------------------
     def _dispatch(self, st: RequestState, net: int, k: int) -> None:
         p = self.placed[net][k]
         inputs = None
-        if self._deps[net][k]:
+        if self._deps[net][k] and not self.virtual:
             inputs = []
             for pk in self._deps[net][k]:
                 prod = self.placed[net][pk]
@@ -116,9 +160,23 @@ class Coordinator:
             while len(inputs) < len(example):
                 inputs.append(inputs[-1])
             inputs = inputs[: len(example)]
+        now = self.clock.now()
+        rec = TaskRecord(
+            group=st.group, request=st.group_request, network=net, sg_index=k,
+            processor=p.processor, released=now,
+        )
         with self._lock:
+            self.trace.append(rec)
+            if (self.virtual and self.dispatch_overhead > 0
+                    and self.dispatch_pid in self.workers):
+                self._seq += 1
+                token_key = (-1, 0, self._seq)
+            else:
+                token_key = None
             self._seq += 1
             seq = self._seq
+        if token_key is not None:
+            self.workers[self.dispatch_pid].submit(token_key, DISPATCH_TOKEN)
         payload = {
             "request": st.request_id,
             "net": net,
@@ -127,9 +185,23 @@ class Coordinator:
             "backend": p.backend,
             "engine_key": p.profile_key(),
             "inputs": inputs,
-            "released": time.perf_counter(),
+            "released": now,
+            "record": rec,
         }
-        self.workers[p.processor].submit((p.priority, seq), payload)
+        self.workers[p.processor].submit((0, p.priority, seq), payload)
+
+    def on_task_start(self, payload: Dict) -> None:
+        """Worker hook at execution start: stamp the record + request."""
+        with self._lock:
+            st = self._requests[payload["request"]]
+            started = payload["started"]
+            if st.first_start is None or started < st.first_start:
+                st.first_start = started
+            rec: TaskRecord = payload["record"]
+            rec.started = started
+            rec.comm_time = payload.get("comm_s", 0.0)
+            rec.quant_time = payload.get("quant_s", 0.0)
+            rec.exec_time = payload.get("exec_s", 0.0)
 
     def on_task_done(self, payload: Dict, result: Any, quant_t: float,
                      exec_t: float) -> None:
@@ -141,14 +213,19 @@ class Coordinator:
                 if not st.future.done():
                     st.future.set_exception(result)
                 return
-            now = time.perf_counter()
-            if st.first_start is None:
-                st.first_start = payload["released"]
+            now = self.clock.now()
+            rec: TaskRecord = payload["record"]
+            rec.finished = now
+            # real-mode quant time is only known at completion
+            rec.quant_time = quant_t
+            rec.exec_time = payload.get("exec_s", exec_t)
             st.outputs[(net, k)] = result
             st.remaining -= 1
+            if now > st.last_finish:
+                st.last_finish = now
             st.task_records.append({
                 "net": net, "sg": k, "quant_s": quant_t, "exec_s": exec_t,
-                "wait_s": now - payload["released"] - exec_t - quant_t,
+                "wait_s": rec.started - payload["released"],
             })
             for s in self._succs[net][k]:
                 st.pending_deps[(net, s)] -= 1

@@ -10,7 +10,9 @@ slowest, reproducing Table 2's ordering). New engines register via
 from __future__ import annotations
 
 import threading
-from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+import time
+from collections import deque
+from typing import Any, Callable, Deque, Dict, Optional, Sequence, Tuple
 
 import jax
 
@@ -18,13 +20,25 @@ from ..core.chromosome import PlacedSubgraph
 
 
 class Engine:
-    """Loads subgraphs once, executes many times (keyed by Merkle hash)."""
+    """Loads subgraphs once, executes many times (keyed by Merkle hash).
+
+    Every execution is timed (injectable ``timer``, default
+    ``time.perf_counter``) and recorded per key in ``exec_times`` — the keys
+    *are* Merkle profile keys, so these samples feed straight back into the
+    :class:`~repro.core.profiler.ProfileDB` as device-in-the-loop
+    measurements (``PuzzleRuntime.measured_costs``). Load-time warm-up runs
+    are not recorded, and only the most recent ``MAX_SAMPLES`` per key are
+    kept — a long-lived serving runtime must not grow without bound.
+    """
 
     name = "base"
+    MAX_SAMPLES = 64
 
-    def __init__(self):
+    def __init__(self, timer: Callable[[], float] = time.perf_counter):
         self._handles: Dict[str, Tuple[Callable, Tuple]] = {}
         self._lock = threading.Lock()
+        self._timer = timer
+        self.exec_times: Dict[str, Deque[float]] = {}
 
     def load(self, placed: PlacedSubgraph, executables: Dict[str, Any]) -> str:
         key = placed.profile_key()
@@ -43,8 +57,13 @@ class Engine:
     def execute(self, key: str, inputs: Optional[Sequence] = None):
         fn, example = self._handles[key]
         args = inputs if inputs is not None else example
+        t0 = self._timer()
         out = fn(*args)
         jax.block_until_ready(out)
+        samples = self.exec_times.get(key)
+        if samples is None:
+            samples = self.exec_times[key] = deque(maxlen=self.MAX_SAMPLES)
+        samples.append(self._timer() - t0)
         return out
 
 

@@ -1,6 +1,19 @@
 """PuzzleRuntime: user-facing assembly of Coordinator + Workers + Engines
 (paper §5), with the Tensor Pool and Zero-Copy Shared Buffer optimizations
 toggleable for the §5.3 ablation.
+
+Two execution modes:
+
+* **real** (default) — threads + genuine JAX execution of the executable
+  zoo models, wall-clock timestamps. Engines record per-Merkle-key
+  execution times; :meth:`PuzzleRuntime.measured_costs` aggregates them
+  into device-in-the-loop measurements for the ProfileDB feedback loop.
+* **virtual** (``RuntimeConfig(virtual=True)`` + a ``FastSimSpec``) — no
+  threads, no execution: a :class:`~repro.runtime.clock.VirtualClock`
+  drives the very same Coordinator/Worker dispatch logic over the spec's
+  cost arrays, so a run is a deterministic, instant replay whose task
+  trace is bit-comparable to :class:`~repro.core.fastsim.FastSimulator`
+  (the runtime↔simulator conformance tier).
 """
 from __future__ import annotations
 
@@ -9,8 +22,11 @@ from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence
 
 from ..core.chromosome import PlacedSubgraph, Solution, decode_solution
+from ..core.fastsim import FastSimSpec
 from ..core.graph import ModelGraph
 from ..core.processors import Processor
+from ..core.simulator import NoiseModel
+from .clock import SimCostSource, VirtualClock, WallClock
 from .coordinator import Coordinator, RequestState
 from .engine import ENGINE_REGISTRY, make_engine
 from .tensorpool import SharedBufferTransport, TensorPool
@@ -21,6 +37,13 @@ from .worker import Worker
 class RuntimeConfig:
     tensor_pool: bool = True
     shared_buffer: bool = True
+    # virtual-clock (conformance) mode: replay FastSimSpec costs on an event
+    # clock instead of sleeping/executing. The noise/dispatch knobs mirror
+    # the simulators' measured-evaluation parameters.
+    virtual: bool = False
+    noise: Optional[NoiseModel] = None
+    dispatch_overhead: float = 0.0
+    dispatch_pid: int = 0
 
 
 class PuzzleRuntime:
@@ -31,38 +54,72 @@ class PuzzleRuntime:
         graphs: Sequence[ModelGraph],
         solution: Solution,
         processors: Sequence[Processor],
-        executables: Dict[str, Any],
+        executables: Optional[Dict[str, Any]] = None,
         config: Optional[RuntimeConfig] = None,
+        spec: Optional[FastSimSpec] = None,
     ):
         self.cfg = config or RuntimeConfig()
+        if self.cfg.virtual and spec is None:
+            raise ValueError("virtual-clock mode needs a FastSimSpec "
+                             "(the cost source)")
         self.placed = decode_solution(solution, graphs)
+        self.spec = spec
+        self.clock = VirtualClock() if self.cfg.virtual else WallClock()
         self.pool = TensorPool(enabled=self.cfg.tensor_pool)
         self.transport = SharedBufferTransport(
             self.pool, zero_copy=self.cfg.shared_buffer
         )
         self.workers: Dict[int, Worker] = {}
         self._coordinator: Optional[Coordinator] = None
+        self._closed = False
+
+        cost_source = None
+        if self.cfg.virtual:
+            cost_source = SimCostSource(
+                spec, processors, noise=self.cfg.noise,
+                dispatch_overhead=self.cfg.dispatch_overhead,
+            )
 
         def on_done(payload, result, quant_t, exec_t):
             assert self._coordinator is not None
             self._coordinator.on_task_done(payload, result, quant_t, exec_t)
 
+        def on_start(payload):
+            assert self._coordinator is not None
+            self._coordinator.on_task_start(payload)
+
         for proc in processors:
             engines = {name: make_engine(name) for name in ENGINE_REGISTRY}
             self.workers[proc.pid] = Worker(
-                proc.pid, proc.name, engines, self.pool, self.transport, on_done
+                proc.pid, proc.name, engines, self.pool, self.transport,
+                on_done, clock=self.clock, cost_source=cost_source,
+                on_start=on_start,
             )
-        self._coordinator = Coordinator(self.placed, self.workers, executables)
+        self._coordinator = Coordinator(
+            self.placed, self.workers, executables or {},
+            clock=self.clock, virtual=self.cfg.virtual,
+            dispatch_overhead=self.cfg.dispatch_overhead,
+            dispatch_pid=self.cfg.dispatch_pid,
+        )
         for w in self.workers.values():
             w.start()
 
+    @property
+    def coordinator(self) -> Coordinator:
+        return self._coordinator
+
     # -- serving ------------------------------------------------------------
     def infer(self, networks: Sequence[int], group: int = 0) -> RequestState:
+        if self._closed:
+            raise RuntimeError("PuzzleRuntime is closed")
         return self._coordinator.submit(networks, group)
 
     def infer_sync(self, networks: Sequence[int], timeout: float = 60.0
                    ) -> RequestState:
         st = self.infer(networks)
+        if self.cfg.virtual:
+            self.clock.run()  # drain the event heap; completes synchronously
+            return st.future.result(timeout=0)
         return st.future.result(timeout=timeout)
 
     def run_periodic(
@@ -72,7 +129,15 @@ class PuzzleRuntime:
         num_requests: int = 10,
         timeout: float = 120.0,
     ) -> List[List[RequestState]]:
-        """Drive periodic requests per model group; returns states per group."""
+        """Drive periodic requests per model group; returns states per group.
+
+        Virtual mode reproduces the simulators' request sources exactly —
+        group sources fire at ``rid × period`` on the event clock and the
+        run stops at the same quiescence horizon, so overloaded schedules
+        drop the same requests the simulator drops (``makespan is None``).
+        """
+        if self.cfg.virtual:
+            return self._run_periodic_virtual(groups, periods, num_requests)
         states: List[List[RequestState]] = [[] for _ in groups]
         t0 = time.perf_counter()
         issued = [0] * len(groups)
@@ -99,6 +164,63 @@ class PuzzleRuntime:
                 st.future.result(timeout=max(0.1, deadline - time.perf_counter()))
         return states
 
+    def _run_periodic_virtual(
+        self,
+        groups: Sequence[Sequence[int]],
+        periods: Sequence[float],
+        num_requests: int,
+    ) -> List[List[RequestState]]:
+        states: List[List[RequestState]] = [[] for _ in groups]
+        clock = self.clock
+
+        def make_source(gid: int, rid: int):
+            def fire() -> None:
+                states[gid].append(self.infer(groups[gid], group=gid))
+                if rid + 1 < num_requests:
+                    arrival = (rid + 1) * periods[gid]
+                    # same float expression as the simulators' timeout
+                    # (`now + (arrival - now)`), keeping tie-breaks identical
+                    clock.schedule(arrival - clock.now(),
+                                   make_source(gid, rid + 1))
+            return fire
+
+        for gid in range(len(groups)):
+            clock.schedule(0.0, make_source(gid, 0))
+        horizon = self.sim_horizon(periods, num_requests)
+        clock.run(until=horizon)
+        return states
+
+    @staticmethod
+    def sim_horizon(periods: Sequence[float], num_requests: int) -> float:
+        """The simulators' quiescence horizon, verbatim."""
+        return max((num_requests + 2) * max(periods) * 4.0, 1.0)
+
+    # -- measurement --------------------------------------------------------
+    def measured_costs(self) -> Dict[str, float]:
+        """Measured execution time per Merkle profile key.
+
+        Aggregated over every engine execution this runtime performed (all
+        workers, all requests) — the device-in-the-loop measurements that
+        feed back into the :class:`~repro.core.profiler.ProfileDB`. Per key
+        the slowest sample is discarded when three or more exist (the first
+        execution can pay a JIT recompilation for the staged input
+        signature) and the lower median of the rest is taken — the paper's
+        brief on-target execution medians repeats the same way. Empty in
+        virtual mode (nothing is actually executed).
+        """
+        per_key: Dict[str, List[float]] = {}
+        for w in self.workers.values():
+            for eng in w.engines.values():
+                for key, ts in eng.exec_times.items():
+                    per_key.setdefault(key, []).extend(ts)
+        out: Dict[str, float] = {}
+        for key, ts in per_key.items():
+            ts = sorted(ts)
+            if len(ts) > 2:
+                ts = ts[:-1]
+            out[key] = ts[(len(ts) - 1) // 2]
+        return out
+
     def stats(self) -> Dict[str, Any]:
         return {
             "pool": self.pool.stats.__dict__,
@@ -109,6 +231,24 @@ class PuzzleRuntime:
             },
         }
 
+    # -- lifecycle ----------------------------------------------------------
     def close(self) -> None:
+        """Stop and join worker threads, drain queues, fail pending futures.
+
+        Idempotent; safe mid-request (the stop sentinel outranks queued
+        tasks). After close no worker thread is alive and every unfinished
+        request's future carries a ``RuntimeError``.
+        """
+        if self._closed:
+            return
+        self._closed = True
         for w in self.workers.values():
-            w.stop()
+            w.stop(join=True)
+        if self._coordinator is not None:
+            self._coordinator.cancel_pending()
+
+    def __enter__(self) -> "PuzzleRuntime":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()

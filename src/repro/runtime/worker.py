@@ -1,21 +1,30 @@
 """Worker: one per processor, non-preemptive execution (paper §5.1).
 
-Each Worker owns a priority task queue and two threads: a (de)quantization
-thread and an execution thread, connected by an internal queue — so
-dequantization of the next task overlaps execution of the current one,
-exactly the two-thread design in Fig. 9.
+Each Worker owns a priority task queue. In real-execution mode it runs two
+threads: a (de)quantization thread and an execution thread, connected by an
+internal queue — so dequantization of the next task overlaps execution of
+the current one, exactly the two-thread design in Fig. 9.
+
+In **virtual-clock mode** (``cost_source`` given) the Worker spawns no
+threads at all: it keeps a priority heap of waiting items and cooperates
+with a :class:`~repro.runtime.clock.VirtualClock` — a submitted task is
+*delivered* (costs charged, noise drawn) and *ended* (dependents resolved)
+through scheduled events, reproducing the simulator's
+deliver/end event structure one-to-one. This makes a runtime execution a
+deterministic, instant replay whose task trace is bit-comparable to
+:class:`~repro.core.fastsim.FastSimulator`.
 """
 from __future__ import annotations
 
 import heapq
 import queue
 import threading
-import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .clock import SimCostSource, WallClock
 from .engine import Engine, make_engine
 from .tensorpool import SharedBufferTransport, TensorPool
 
@@ -27,6 +36,20 @@ class WorkerTask:
 
 
 _DTYPE_NP = {"fp32": np.float32, "fp16": np.float32, "int8": np.float32}
+
+#: Stop sentinel. Its priority ``(-2,)`` sorts below every real key — task
+#: keys are ``(0, prio, seq)`` and dispatch tokens ``(-1, 0, seq)`` — so a
+#: stop request jumps the queue even when tasks are still pending (the
+#: abandoned-mid-request case). Putting a bare ``None`` into the
+#: PriorityQueue, as the old code did, raised ``TypeError`` as soon as the
+#: queue was non-empty (``None`` is unorderable against ``WorkerTask``),
+#: leaking both threads forever.
+_STOP = object()
+
+#: Virtual-mode dispatch token: the Coordinator's per-release dispatch work
+#: occupying the dispatch processor (paper §6.3), mirroring the simulators'
+#: sentinel store item.
+DISPATCH_TOKEN = ("dispatch",)
 
 
 class Worker:
@@ -40,6 +63,9 @@ class Worker:
         pool: TensorPool,
         transport: SharedBufferTransport,
         on_done: Callable[[Any, Any, float, float], None],
+        clock=None,
+        cost_source: Optional[SimCostSource] = None,
+        on_start: Optional[Callable[[Any], None]] = None,
     ):
         self.pid = pid
         self.name = name
@@ -47,34 +73,119 @@ class Worker:
         self.pool = pool
         self.transport = transport
         self.on_done = on_done
-        self._queue: "queue.PriorityQueue[Optional[WorkerTask]]" = queue.PriorityQueue()
+        self.on_start = on_start
+        self.clock = clock if clock is not None else WallClock()
+        self.cost_source = cost_source
+        self.virtual = cost_source is not None
+        self._queue: "queue.PriorityQueue[WorkerTask]" = queue.PriorityQueue()
         self._exec_queue: "queue.Queue[Optional[Tuple]]" = queue.Queue(maxsize=4)
         self._quant_thread = threading.Thread(target=self._quant_loop, daemon=True)
         self._exec_thread = threading.Thread(target=self._exec_loop, daemon=True)
         self.busy_time = 0.0
         self.tasks_done = 0
         self._stop = False
+        # virtual-mode state: waiting-item heap + idle flag, exactly the
+        # simulator's per-processor store
+        self._vstore: List[Tuple[Tuple, Any]] = []
+        self._vidle = True
 
     def start(self) -> None:
+        if self.virtual:
+            return  # no threads: the VirtualClock drives everything
         self._quant_thread.start()
         self._exec_thread.start()
 
     def submit(self, priority: Tuple, payload: Any) -> None:
+        if self.virtual:
+            if self._vidle:
+                self._vidle = False
+                self.clock.schedule(0.0, lambda: self._vdeliver(payload))
+            else:
+                heapq.heappush(self._vstore, (priority, payload))
+            return
         self._queue.put(WorkerTask(priority, payload))
 
-    def stop(self) -> None:
-        self._stop = True
-        self._queue.put(None)
+    def stop(self, join: bool = True, timeout: float = 10.0) -> None:
+        """Stop the worker; with ``join`` (default) wait for both threads.
+
+        Safe to call with tasks still queued (the stop sentinel outranks
+        them) and idempotent. After a joined stop no worker thread is alive
+        and both queues are drained.
+        """
+        if self.virtual:
+            self._stop = True
+            return
+        if not self._stop:
+            self._stop = True
+            self._queue.put(WorkerTask((-2,), _STOP))
+        if join:
+            for t in (self._quant_thread, self._exec_thread):
+                if t.ident is not None:
+                    t.join(timeout)
+            self._drain()
+
+    def threads_alive(self) -> bool:
+        return self._quant_thread.is_alive() or self._exec_thread.is_alive()
+
+    def _drain(self) -> None:
+        for q in (self._queue, self._exec_queue):
+            while True:
+                try:
+                    q.get_nowait()
+                except queue.Empty:
+                    break
+
+    # -- virtual-clock execution ----------------------------------------------
+    def _vdeliver(self, payload: Any) -> None:
+        """Task delivery event: charge costs, draw noise, schedule the end.
+
+        Mirrors the simulator's DELIVER event byte for byte: the noise draw
+        happens here (global delivery order), ``busy_time`` accrues the full
+        service time up front, and the end event fires at ``now + total``
+        with ``total = exec + quant + comm`` in that association.
+        """
+        src = self.cost_source
+        if payload is DISPATCH_TOKEN:
+            ov = src.dispatch_overhead
+            self.busy_time += ov
+            self.clock.schedule(ov, self._vpull)
+            return
+        comm, quant, exec_t = src.costs(payload["net"], payload["sg"])
+        exec_t = src.noisy_exec(self.pid, exec_t)
+        payload["started"] = self.clock.now()
+        payload["comm_s"] = comm
+        payload["quant_s"] = quant
+        payload["exec_s"] = exec_t
+        if self.on_start is not None:
+            self.on_start(payload)
+        total = exec_t + quant + comm
+        self.busy_time += total
+        self.clock.schedule(total, lambda: self._vend(payload))
+
+    def _vend(self, payload: Any) -> None:
+        """Task end event: resolve dependents, then pull the next item."""
+        self.tasks_done += 1
+        # the Coordinator releases ready successors *before* this worker
+        # pulls its next item — same order as the simulator's END event
+        self.on_done(payload, None, payload["quant_s"], payload["exec_s"])
+        self._vpull()
+
+    def _vpull(self) -> None:
+        if self._vstore:
+            _, payload = heapq.heappop(self._vstore)
+            self.clock.schedule(0.0, lambda: self._vdeliver(payload))
+        else:
+            self._vidle = True
 
     # -- dequant/staging thread ---------------------------------------------
     def _quant_loop(self) -> None:
         while True:
             task = self._queue.get()
-            if task is None:
+            if task.payload is _STOP:
                 self._exec_queue.put(None)
                 return
             payload = task.payload
-            t0 = time.perf_counter()
+            t0 = self.clock.now()
             inputs = payload.get("inputs")
             prepared = []
             if inputs is not None:
@@ -88,7 +199,7 @@ class Worker:
                         prepared.append(arr)
                     else:
                         prepared.append(self.transport.transfer(tensor))
-            quant_t = time.perf_counter() - t0
+            quant_t = self.clock.now() - t0
             self._exec_queue.put((payload, prepared, quant_t))
 
     # -- execution thread -----------------------------------------------------
@@ -99,14 +210,17 @@ class Worker:
                 return
             payload, prepared, quant_t = item
             engine: Engine = self.engines[payload["backend"]]
-            t0 = time.perf_counter()
+            t0 = self.clock.now()
+            payload["started"] = t0
+            if self.on_start is not None:
+                self.on_start(payload)
             try:
                 out = engine.execute(payload["engine_key"],
                                      prepared if prepared else None)
                 err = None
             except Exception as e:  # surface, don't kill the worker
                 out, err = None, e
-            exec_t = time.perf_counter() - t0
+            exec_t = self.clock.now() - t0
             # staged input buffers are consumed by the engine call — return
             # them to the pool (the Tensor Pool recycling path, §5.3)
             for arr in prepared:
@@ -114,4 +228,6 @@ class Worker:
                     self.pool.release(arr)
             self.busy_time += exec_t + quant_t
             self.tasks_done += 1
+            payload["quant_s"] = quant_t
+            payload["exec_s"] = exec_t
             self.on_done(payload, out if err is None else err, quant_t, exec_t)

@@ -1,0 +1,252 @@
+"""Device-in-the-loop tier: runtime↔simulator conformance + measured-cost
+feedback (StaticAnalyzer.validate_on_runtime / apply_measured_costs /
+GAConfig.device_in_loop_interval)."""
+import random
+
+import pytest
+
+from repro.core import (
+    AnalyzerConfig,
+    GAConfig,
+    GeneticScheduler,
+    PAPER_COMM_MODEL,
+    Profiler,
+    SolutionFactory,
+    StaticAnalyzer,
+    branching_graph,
+    chain_graph,
+    decode_solution,
+    mobile_processors,
+)
+from repro.core.profiler import AnalyticMobileBackend
+from repro.core.scenarios import Scenario
+
+PROCS = mobile_processors()
+
+
+def _nets():
+    return [
+        chain_graph("cfa", [("conv", 4e6, 1000, 4000)] * 5),
+        branching_graph("cfb", [("conv", 2e6, 800, 2000)] * 4,
+                        [(0, 1), (0, 2), (1, 3), (2, 3)]),
+    ]
+
+
+def _analyzer(groups=((0,), (1,)), **cfg_kw):
+    nets = _nets()
+    scenario = Scenario(name="conf", graphs=nets,
+                        groups=[list(g) for g in groups])
+    return StaticAnalyzer(
+        scenario, PROCS, Profiler(AnalyticMobileBackend(PROCS)),
+        PAPER_COMM_MODEL, AnalyzerConfig(**cfg_kw),
+    )
+
+
+def _solutions(nets, count, seed=0):
+    fac = SolutionFactory(nets, num_processors=len(PROCS),
+                          rng=random.Random(seed))
+    return [fac.random_solution() for _ in range(count)]
+
+
+# -- virtual conformance ------------------------------------------------------
+
+@pytest.mark.parametrize("measured", [False, True])
+def test_validate_on_runtime_virtual_zero_diff(measured):
+    an = _analyzer()
+    for sol in _solutions(an.scenario.graphs, 3, seed=2):
+        rep = an.validate_on_runtime(sol, alpha=1.0, num_requests=8,
+                                     measured=measured, seed=6)
+        assert rep.mode == "virtual"
+        assert rep.passed, rep.summary()
+        assert rep.ordering_match
+        assert rep.runtime_tasks == rep.sim_tasks > 0
+        assert rep.max_release_diff == 0.0
+        assert rep.max_start_diff == 0.0
+        assert rep.max_finish_diff == 0.0
+        assert rep.max_makespan_diff == 0.0
+        assert rep.max_busy_diff == 0.0
+
+
+def test_validate_on_runtime_overload_drops_match():
+    """Dropped requests (overload) must drop identically on both sides."""
+    an = _analyzer(groups=((0, 1),))
+    sol = _solutions(an.scenario.graphs, 1, seed=4)[0]
+    # everything cut apart and pinned to one processor: maximal queueing
+    sol.partition = [[1] * g.num_edges for g in an.scenario.graphs]
+    sol.mapping = [[0] * g.num_layers for g in an.scenario.graphs]
+    rep = an.validate_on_runtime(sol, alpha=0.001, num_requests=700,
+                                 measured=True, seed=1)
+    assert rep.passed, rep.summary()
+    dropped = [m for m in rep.sim_trace["makespans"] if m is None]
+    assert dropped, "overload scenario dropped nothing; not exercising drops"
+    assert rep.runtime_trace["makespans"] == rep.sim_trace["makespans"]
+
+
+def test_conformance_trace_uses_golden_schema():
+    an = _analyzer()
+    sol = _solutions(an.scenario.graphs, 1)[0]
+    rep = an.validate_on_runtime(sol, num_requests=4)
+    for trace in (rep.runtime_trace, rep.sim_trace):
+        assert set(trace) == {"horizon", "busy_time", "requests",
+                              "makespans", "tasks"}
+        assert all(len(t) == 11 for t in trace["tasks"])
+        assert all(len(r) == 7 for r in trace["requests"])
+    doc = rep.to_json()
+    assert doc["passed"] is True
+    assert "runtime_trace" in doc and "sim_trace" in doc
+    assert "runtime_trace" not in rep.to_json(include_traces=False)
+
+
+def test_build_report_detects_divergence():
+    """A perturbed trace must fail the zero-tolerance comparison."""
+    from repro.runtime.conformance import build_report
+    an = _analyzer()
+    sol = _solutions(an.scenario.graphs, 1, seed=9)[0]
+    a = an.simulate(sol, 1.0, 6, collect_tasks=True)
+    b = an.simulate(sol, 1.0, 6, collect_tasks=True)
+    ok = build_report("virtual", a, b)
+    assert ok.passed
+    b.tasks[3].started += 1e-9
+    bad = build_report("virtual", a, b)
+    assert not bad.passed
+    assert bad.max_start_diff > 0
+
+
+# -- measured-cost feedback ---------------------------------------------------
+
+def test_apply_measured_costs_invalidates_and_changes_objectives():
+    an = _analyzer()
+    sol = _solutions(an.scenario.graphs, 1, seed=5)[0]
+    before = an.objectives(sol, num_requests=8)
+    placed = decode_solution(sol, an.scenario.graphs)
+    key = placed[0][0].profile_key()
+    old = an.profiler.db.get(key)
+    assert old is not None  # profiled during the first evaluation
+
+    # same value -> no invalidation, caches stay warm
+    assert an.apply_measured_costs({key: old}) == 0
+    hits_before = an.objective_cache_hits
+    assert an.objectives(sol, num_requests=8) == before
+    assert an.objective_cache_hits == hits_before + 1
+
+    # measured value 10x slower -> caches flushed, objectives move
+    assert an.apply_measured_costs({key: old * 10.0}) == 1
+    assert an.profiler.db.get(key) == old * 10.0
+    after = an.objectives(sol, num_requests=8)
+    assert after != before
+    assert sum(after) > sum(before)
+
+    # and the new objectives equal a fresh analyzer over the updated DB
+    fresh = _analyzer()
+    fresh.profiler.db.update(key, old * 10.0)
+    assert fresh.objectives(sol, num_requests=8) == after
+
+
+def test_apply_measured_costs_only_affected_solutions_change():
+    an = _analyzer()
+    sols = _solutions(an.scenario.graphs, 6, seed=7)
+    before = [an.objectives(s, num_requests=6) for s in sols]
+    # perturb one profile key used by sols[0]
+    placed = decode_solution(sols[0], an.scenario.graphs)
+    key = placed[1][0].profile_key()
+    old = an.profiler.db.get(key)
+    an.apply_measured_costs({key: old * 7.5})
+    after = [an.objectives(s, num_requests=6) for s in sols]
+    uses = [key in {p.profile_key()
+                    for plist in decode_solution(s, an.scenario.graphs)
+                    for p in plist} for s in sols]
+    for u, b, a in zip(uses, before, after):
+        if u:
+            assert a != b
+        else:
+            assert a == b  # untouched keys re-derive identical costs
+
+
+def test_conformance_holds_after_measured_update():
+    """The virtual runtime replays whatever costs the analyzer now holds —
+    conformance is preserved across feedback rounds."""
+    an = _analyzer()
+    sol = _solutions(an.scenario.graphs, 1, seed=8)[0]
+    placed = decode_solution(sol, an.scenario.graphs)
+    key = placed[0][0].profile_key()
+    an.objectives(sol)  # populate DB
+    an.apply_measured_costs({key: an.profiler.db.get(key) * 3.0})
+    rep = an.validate_on_runtime(sol, num_requests=8, measured=True)
+    assert rep.passed, rep.summary()
+
+
+def test_ga_device_in_loop_interval_reranks():
+    """Measurement rounds flush the GA's fitness memo and re-rank on the
+    fed-back costs (stubbed measurement: no real execution needed)."""
+    an = _analyzer(ga=GAConfig(pop_size=8, max_generations=6,
+                               min_generations=6, patience=99, seed=3,
+                               device_in_loop_interval=2))
+    factor = [2.0]
+
+    def fake_measure(front):
+        total = 0
+        for s in front[:1]:
+            placed = decode_solution(s, an.scenario.graphs)
+            key = placed[0][0].profile_key()
+            old = an.profiler.db.get(key)
+            if old is None:
+                continue
+            total += an.apply_measured_costs({key: old * factor[0]})
+            factor[0] *= 1.5
+        return total
+
+    sched = GeneticScheduler(
+        factory=an.factory,
+        evaluate_fast=lambda s: an.objectives(s, num_requests=6),
+        config=an.cfg.ga,
+        measure_device=fake_measure,
+    )
+    res = sched.run(seeds=_solutions(an.scenario.graphs, 4, seed=1))
+    assert res.device_updates, "no measurement round updated the DB"
+    gens = [g for g, _ in res.device_updates]
+    assert all(g % 2 == 0 for g in gens)
+    # population fitness was recomputed on the updated costs
+    for s in res.pareto:
+        assert s.fitness == an.objectives(s, num_requests=6)
+
+
+def test_rerank_pareto_refreshes_fitness():
+    an = _analyzer()
+    sols = _solutions(an.scenario.graphs, 5, seed=12)
+    for s in sols:
+        s.fitness = an.objectives(s, num_requests=6)
+    placed = decode_solution(sols[0], an.scenario.graphs)
+    key = placed[0][0].profile_key()
+    an.apply_measured_costs({key: an.profiler.db.get(key) * 20.0})
+    front = an.rerank_pareto(sols, num_requests=8)
+    assert front and all(any(f is s for s in sols) for f in front)
+    for s in sols:
+        assert s.fitness == an.objectives(s, num_requests=8, measured=True)
+
+
+# -- sweep integration --------------------------------------------------------
+
+def test_sweep_validate_runtime_records_conformance(tmp_path):
+    from repro.experiments import (
+        ScenarioResult, SweepConfig, evaluate_scenario,
+        generate_scenario_specs,
+    )
+    spec = generate_scenario_specs(1, seed=3)[0]
+    config = SweepConfig(pop_size=6, max_generations=4, min_generations=2,
+                         bm_max_evals=20, satisfaction_requests=10,
+                         validate_runtime=True)
+    result = evaluate_scenario(spec, config)
+    assert result.runtime_conformance is not None
+    assert result.runtime_conformance["passed"] is True
+    assert result.runtime_conformance["max_release_diff"] == 0.0
+    # round-trips through JSON
+    doc = result.to_json()
+    assert doc["runtime_conformance"]["passed"] is True
+    back = ScenarioResult.from_json(doc)
+    assert back.runtime_conformance == result.runtime_conformance
+    # and the default config records nothing
+    result2 = evaluate_scenario(
+        spec, SweepConfig(pop_size=6, max_generations=4, min_generations=2,
+                          bm_max_evals=20, satisfaction_requests=10))
+    assert result2.runtime_conformance is None
+    assert "runtime_conformance" not in result2.to_json()

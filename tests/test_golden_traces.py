@@ -1,12 +1,13 @@
-"""Golden-trace regression: canonical task traces for three fixed scenarios.
+"""Golden-trace regression: canonical task traces for four fixed scenarios.
 
 ``tests/golden/*.json`` holds the reference :class:`SimResult` — the exact
 task ordering (release/start/finish times, costs, placements), request
 records, busy times and horizon — produced by the reference DES at a fixed
-seed. Every engine (RuntimeSimulator, FastSimulator, BatchSimulator) must
-reproduce it *bit for bit*: any silent semantic drift in dispatch order,
-tie-breaking, cost arithmetic or the noise stream fails loudly here even if
-the engines still agree with each other.
+seed. Every engine tier (RuntimeSimulator, FastSimulator, BatchSimulator,
+and the virtual-clock PuzzleRuntime) must reproduce it *bit for bit*: any
+silent semantic drift in dispatch order, tie-breaking, cost arithmetic or
+the noise stream fails loudly here even if the engines still agree with
+each other.
 
 Regenerate (after an intentional semantic change) with::
 
@@ -16,7 +17,6 @@ and review the diff — a regeneration that changes values is a semantics
 change and must be called out in the PR.
 """
 import json
-import math
 import os
 import random
 import sys
@@ -39,6 +39,7 @@ from repro.core import (
     mobile_processors,
 )
 from repro.core.profiler import AnalyticMobileBackend
+from repro.runtime.conformance import run_virtual_schedule, serialize_result
 
 GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
 
@@ -77,6 +78,21 @@ def _solution(nets, seed, cut_prob=0.35, pin=None):
     return fac.random_solution()
 
 
+def _nets_runtime_conformance():
+    """Mixed chain/branching set exercising the conformance-critical
+    semantics at once: cross-group contention, noise draws in delivery
+    order, dispatch-token injection, cross-processor boundaries and
+    multi-producer joins (seed 11 decodes to 1+4+2 subgraphs over three
+    processors)."""
+    return [
+        chain_graph("p", [("conv", 3e6, 900, 3000)] * 7),
+        branching_graph("q", [("conv", 2.5e6, 700, 2200)] * 8,
+                        [(0, 1), (0, 2), (1, 3), (2, 3), (3, 4), (4, 5),
+                         (3, 6), (5, 7), (6, 7)]),
+        chain_graph("r", [("fc", 6e6, 1500, 6000)] * 5),
+    ]
+
+
 #: name -> (nets, groups, periods, num_requests, noise seed, dispatch, pin)
 SCENARIOS = {
     "tri_chain_clean": (
@@ -86,6 +102,11 @@ SCENARIOS = {
         None),
     "diamond_mix_overload": (
         _nets_diamond_mix, [[0, 1], [2, 3]], [2e-6, 2e-6], 30, None, 0.0, 0),
+    # the device-in-the-loop tier's canonical trace (PR 4): replayed through
+    # all four engine tiers including the virtual-clock PuzzleRuntime
+    "runtime_conformance": (
+        _nets_runtime_conformance, [[0, 2], [1]], [0.035, 0.05], 8, 3,
+        150e-6, None),
 }
 
 
@@ -103,26 +124,9 @@ def _run_reference(name):
     return nets, sol, groups, periods, nr, noise, dispatch, res
 
 
-def _serialize(res):
-    return {
-        "horizon": res.horizon,
-        "busy_time": {str(pid): t for pid, t in sorted(res.busy_time.items())},
-        "requests": [
-            [r.group, r.request, r.arrival, r.first_start, r.last_finish,
-             r.done_tasks, r.total_tasks]
-            for r in res.requests
-        ],
-        "makespans": [
-            None if math.isinf(r.makespan) else r.makespan
-            for r in res.requests
-        ],
-        "tasks": [
-            [t.group, t.request, t.network, t.sg_index, t.processor,
-             t.released, t.started, t.finished,
-             t.comm_time, t.quant_time, t.exec_time]
-            for t in res.tasks
-        ],
-    }
+# single schema source: the runtime conformance harness serializes the same
+# way, so runtime traces diff directly against these files
+_serialize = serialize_result
 
 
 def _assert_matches_golden(res, golden, engine):
@@ -166,6 +170,15 @@ def test_golden_trace(name):
     ).run(collect_tasks=True)
     _assert_matches_golden(batch.result(0), golden, "batchsim")
 
+    # fourth tier: the actual Coordinator/Worker dispatch code replaying the
+    # spec's costs on the virtual clock — the device-in-the-loop
+    # conformance path must reproduce the same trace bit for bit
+    virtual = run_virtual_schedule(
+        nets, sol, PROCS, spec, groups, periods, nr,
+        noise=noise, dispatch_overhead=dispatch,
+    )
+    _assert_matches_golden(virtual, golden, "virtual-runtime")
+
 
 def test_golden_traces_have_interesting_structure():
     """The committed traces must exercise the semantics they guard."""
@@ -180,6 +193,14 @@ def test_golden_traces_have_interesting_structure():
             varied = True
         execs[key] = ex
     assert varied, "measured trace shows no run-to-run exec variance"
+    with open(os.path.join(GOLDEN_DIR, "runtime_conformance.json")) as f:
+        conf = json.load(f)
+    # the conformance trace must exercise multi-subgraph dependencies on
+    # multiple processors, dispatch load, and a completed/dropped mix
+    assert len({t[4] for t in conf["tasks"]}) >= 3, "single-processor trace"
+    assert any(t[8] > 0 for t in conf["tasks"]), "no cross-processor comm"
+    assert any(m is None for m in conf["makespans"])
+    assert any(m is not None for m in conf["makespans"])
     with open(os.path.join(GOLDEN_DIR, "diamond_mix_overload.json")) as f:
         overload = json.load(f)
     assert any(m is None for m in overload["makespans"]), (

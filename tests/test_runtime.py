@@ -1,16 +1,43 @@
-"""Puzzle Runtime: coordinator/worker/engine behaviour + §5.3 optimizations."""
+"""Puzzle Runtime: coordinator/worker/engine behaviour + §5.3 optimizations.
+
+Scheduling-behaviour tests run in **virtual-clock mode** — deterministic,
+instant, no ``time.sleep`` and no wall-clock-dependent assertions — while
+real-execution tests (engine agreement, tensor pool, measured costs) keep
+exercising the threaded path but assert only on counts and values, never on
+timing.
+"""
+import random
+import threading
+
 import numpy as np
 import pytest
 
-from repro.core import Solution, mobile_processors
+from repro.core import (
+    PAPER_COMM_MODEL,
+    Profiler,
+    Solution,
+    SolutionFactory,
+    build_spec,
+    decode_solution,
+    mobile_processors,
+)
+from repro.core.profiler import AnalyticMobileBackend
+from repro.core.simulator import NoiseModel
+from repro.core.fastsim import FastSimulator
+from repro.core.graph import branching_graph, chain_graph
 from repro.runtime import (
     PuzzleRuntime,
     RuntimeConfig,
     TensorPool,
     SharedBufferTransport,
+    VirtualClock,
     make_engine,
+    runtime_result,
 )
 from repro.zoo import executable_zoo
+
+PROCS = mobile_processors()
+PROFILER = Profiler(AnalyticMobileBackend(PROCS))
 
 
 @pytest.fixture(scope="module")
@@ -33,19 +60,210 @@ def _solution(graphs, split_first=True):
     )
 
 
-def test_end_to_end_inference(zoo):
-    graphs = [zoo["face_det"].graph, zoo["selfie_seg"].graph]
-    rt = PuzzleRuntime(graphs, _solution(graphs), mobile_processors(), zoo)
-    try:
+def _virtual_runtime(nets, sol, noise=None, dispatch=0.0):
+    spec = build_spec(decode_solution(sol, nets), PROCS, PROFILER,
+                      PAPER_COMM_MODEL)
+    rt = PuzzleRuntime(
+        nets, sol, PROCS,
+        config=RuntimeConfig(virtual=True, noise=noise,
+                             dispatch_overhead=dispatch),
+        spec=spec,
+    )
+    return rt, spec
+
+
+def _random_nets():
+    return [
+        chain_graph("vx", [("conv", 4e6, 1000, 4000)] * 5),
+        branching_graph("vy", [("conv", 2e6, 800, 2000)] * 4,
+                        [(0, 1), (0, 2), (1, 3), (2, 3)]),
+    ]
+
+
+# -- virtual-clock scheduling behaviour (deterministic, no wall clock) -------
+
+def test_virtual_end_to_end_inference():
+    nets = _random_nets()
+    sol = SolutionFactory(nets, num_processors=len(PROCS),
+                          rng=random.Random(3)).random_solution()
+    rt, _ = _virtual_runtime(nets, sol)
+    with rt:
         st = rt.infer_sync([0, 1])
         assert st.makespan is not None and st.makespan > 0
+        placed = decode_solution(sol, nets)
+        assert len(st.task_records) == sum(len(p) for p in placed)
+        # virtual time advanced, and deterministically so
+        assert rt.clock.now() == st.finish
+
+
+def test_virtual_cross_processor_dependency_order():
+    """The consumer subgraph must start only after its producer finishes."""
+    nets = _random_nets()
+    sol = SolutionFactory(nets, num_processors=len(PROCS),
+                          rng=random.Random(5)).random_solution()
+    rt, _ = _virtual_runtime(nets, sol)
+    with rt:
+        rt.infer_sync([0, 1])
+        trace = rt.coordinator.trace
+        finished = {}
+        for rec in trace:
+            finished[(rec.network, rec.sg_index)] = rec.finished
+        deps = rt.coordinator._deps
+        for rec in trace:
+            for producer in deps[rec.network][rec.sg_index]:
+                assert rec.started >= finished[(rec.network, producer)]
+
+
+def test_virtual_periodic_requests_all_complete():
+    nets = _random_nets()
+    sol = SolutionFactory(nets, num_processors=len(PROCS),
+                          rng=random.Random(7)).random_solution()
+    rt, _ = _virtual_runtime(nets, sol)
+    with rt:
+        res = rt.run_periodic([[0], [1]], [0.02, 0.03], num_requests=4)
+        assert len(res) == 2
+        for glist in res:
+            assert len(glist) == 4
+            for st in glist:
+                assert st.makespan is not None
+        # request sources fired at exactly rid × period (virtual time)
+        for gid, period in enumerate([0.02, 0.03]):
+            for rid, st in enumerate(res[gid]):
+                assert st.submitted == rid * period
+
+
+def test_virtual_runtime_matches_fastsim():
+    """Virtual-clock execution is bit-identical to the fast simulator."""
+    nets = _random_nets()
+    sol = SolutionFactory(nets, num_processors=len(PROCS),
+                          rng=random.Random(11)).random_solution()
+    groups, periods, nr = [[0], [1]], [0.004, 0.006], 6
+    noise = NoiseModel(seed=4)
+    rt, spec = _virtual_runtime(nets, sol, noise=noise, dispatch=150e-6)
+    with rt:
+        states = rt.run_periodic(groups, periods, num_requests=nr)
+        got = runtime_result(rt, states, periods, nr)
+    want = FastSimulator(
+        spec, groups=groups, periods=periods, num_requests=nr,
+        noise=noise, dispatch_overhead=150e-6,
+    ).run(collect_tasks=True)
+    assert [(t.network, t.sg_index, t.released, t.started, t.finished,
+             t.exec_time) for t in got.tasks] == \
+           [(t.network, t.sg_index, t.released, t.started, t.finished,
+             t.exec_time) for t in want.tasks]
+    assert got.busy_time == want.busy_time
+    assert [r.makespan for r in got.requests] == \
+           [r.makespan for r in want.requests]
+
+
+def test_virtual_runtime_is_deterministic():
+    nets = _random_nets()
+    sol = SolutionFactory(nets, num_processors=len(PROCS),
+                          rng=random.Random(13)).random_solution()
+    traces = []
+    for _ in range(2):
+        rt, _ = _virtual_runtime(nets, sol, noise=NoiseModel(seed=9))
+        with rt:
+            states = rt.run_periodic([[0, 1]], [0.01], num_requests=5)
+            traces.append([
+                (t.network, t.sg_index, t.released, t.started, t.finished)
+                for t in rt.coordinator.trace
+            ])
+            assert all(st.makespan is not None for st in states[0])
+    assert traces[0] == traces[1]
+
+
+def test_virtual_clock_event_ordering():
+    clock = VirtualClock()
+    fired = []
+    clock.schedule(0.5, lambda: fired.append("b"))
+    clock.schedule(0.5, lambda: fired.append("c"))  # same time: push order
+    clock.schedule(0.1, lambda: fired.append("a"))
+    clock.schedule(2.0, lambda: fired.append("past-horizon"))
+    clock.run(until=1.0)
+    assert fired == ["a", "b", "c"]
+    assert clock.now() == 0.5
+    assert clock.pending == 1
+
+
+# -- lifecycle: close(), thread leaks, abandoned requests --------------------
+
+def test_close_joins_all_worker_threads(zoo):
+    graphs = [zoo["face_det"].graph, zoo["selfie_seg"].graph]
+    rt = PuzzleRuntime(graphs, _solution(graphs), mobile_processors(), zoo)
+    threads = [t for w in rt.workers.values()
+               for t in (w._quant_thread, w._exec_thread)]
+    assert all(t.is_alive() for t in threads)
+    rt.infer_sync([0, 1])
+    rt.close()
+    assert all(not t.is_alive() for t in threads)
+    assert not any(w.threads_alive() for w in rt.workers.values())
+    rt.close()  # idempotent
+
+
+def test_close_mid_request_fails_pending_futures(zoo):
+    """Abandoning a runtime mid-request must not leak threads or hang."""
+    graphs = [zoo["face_det"].graph, zoo["selfie_seg"].graph]
+    rt = PuzzleRuntime(graphs, _solution(graphs), mobile_processors(), zoo)
+    states = [rt.infer([0, 1]) for _ in range(8)]
+    rt.close()  # queues may still hold tasks: the stop sentinel outranks them
+    assert not any(w.threads_alive() for w in rt.workers.values())
+    for st in states:
+        # either completed before the stop sentinel won the queue race,
+        # or failed with the close error — never left hanging
+        assert st.future.done()
+    with pytest.raises(RuntimeError):
+        rt.infer([0, 1])
+
+
+def test_context_manager_closes(zoo):
+    graphs = [zoo["face_det"].graph, zoo["selfie_seg"].graph]
+    with PuzzleRuntime(graphs, _solution(graphs), mobile_processors(),
+                       zoo) as rt:
+        st = rt.infer_sync([0, 1])
+        assert st.makespan is not None
+    assert not any(w.threads_alive() for w in rt.workers.values())
+
+
+def test_worker_stop_with_queued_tasks_regression(zoo):
+    """stop() with a non-empty priority queue used to raise TypeError
+    (None unorderable vs WorkerTask) and leak both threads."""
+    graphs = [zoo["face_det"].graph]
+    g = graphs[0]
+    sol = Solution(partition=[[0] * g.num_edges], mapping=[[0] * g.num_layers],
+                   priority=[0], dtype=[0], backend=[0])
+    rt = PuzzleRuntime(graphs, sol, mobile_processors(), zoo)
+    w = rt.workers[0]
+    # pile tasks into the queue faster than they can drain, then stop
+    for _ in range(32):
+        rt.infer([0])
+    rt.close()
+    assert not w.threads_alive()
+
+
+def test_no_leaked_threads_across_many_runtimes(zoo):
+    graphs = [zoo["face_det"].graph, zoo["selfie_seg"].graph]
+    base = threading.active_count()
+    for _ in range(3):
+        with PuzzleRuntime(graphs, _solution(graphs), mobile_processors(),
+                           zoo) as rt:
+            rt.infer_sync([0, 1])
+    assert threading.active_count() <= base
+
+
+# -- real execution: engines, memory optimizations ---------------------------
+
+def test_end_to_end_inference(zoo):
+    graphs = [zoo["face_det"].graph, zoo["selfie_seg"].graph]
+    with PuzzleRuntime(graphs, _solution(graphs), mobile_processors(),
+                       zoo) as rt:
+        st = rt.infer_sync([0, 1])
+        assert st.makespan is not None
         # face_det split into 2 subgraphs + selfie 1
         assert len(st.task_records) == 3
         out = st.outputs
         assert all(not np.any(np.isnan(np.asarray(v, np.float32)))
                    for v in out.values() if not isinstance(v, tuple))
-    finally:
-        rt.close()
 
 
 def test_cross_processor_dependency_order(zoo):
@@ -57,27 +275,24 @@ def test_cross_processor_dependency_order(zoo):
         mapping=[[2] * (g.num_layers - 1) + [1]],
         priority=[0], dtype=[0], backend=[0],
     )
-    rt = PuzzleRuntime(graphs, sol, mobile_processors(), zoo)
-    try:
+    with PuzzleRuntime(graphs, sol, mobile_processors(), zoo) as rt:
         st = rt.infer_sync([0])
         recs = {r["sg"]: r for r in st.task_records}
         assert set(recs) == {0, 1}
-    finally:
-        rt.close()
 
 
-def test_periodic_requests_all_complete(zoo):
+def test_measured_costs_keyed_by_profile_key(zoo):
+    """Real execution produces per-Merkle-key medians for the feedback loop."""
     graphs = [zoo["face_det"].graph, zoo["selfie_seg"].graph]
-    rt = PuzzleRuntime(graphs, _solution(graphs), mobile_processors(), zoo)
-    try:
-        res = rt.run_periodic([[0], [1]], [0.02, 0.03], num_requests=4)
-        assert len(res) == 2
-        for glist in res:
-            assert len(glist) == 4
-            for st in glist:
-                assert st.makespan is not None
-    finally:
-        rt.close()
+    sol = _solution(graphs)
+    with PuzzleRuntime(graphs, sol, mobile_processors(), zoo) as rt:
+        for _ in range(3):
+            rt.infer_sync([0, 1])
+        costs = rt.measured_costs()
+    placed = decode_solution(sol, graphs)
+    expected_keys = {p.profile_key() for plist in placed for p in plist}
+    assert set(costs) == expected_keys
+    assert all(t > 0 for t in costs.values())
 
 
 def test_tensor_pool_reuse():
@@ -125,6 +340,7 @@ def test_engines_agree(zoo):
         eng = make_engine(name)
         key = eng.load(placed, zoo)
         outs[name] = np.asarray(eng.execute(key), np.float32)
+        assert key in eng.exec_times and len(eng.exec_times[key]) == 1
     np.testing.assert_allclose(outs["default"], outs["nnapi"], rtol=1e-4, atol=1e-5)
     np.testing.assert_allclose(outs["default"], outs["xnnpack"], rtol=1e-2, atol=1e-3)
 
@@ -139,14 +355,11 @@ def test_ablation_pool_reduces_mallocs(zoo):
     )
     counts = {}
     for pool_on in (False, True):
-        rt = PuzzleRuntime(
+        with PuzzleRuntime(
             graphs, sol, mobile_processors(), zoo,
             RuntimeConfig(tensor_pool=pool_on, shared_buffer=False),
-        )
-        try:
+        ) as rt:
             for _ in range(6):
                 rt.infer_sync([0, 1])
             counts[pool_on] = rt.stats()["pool"]["mallocs"]
-        finally:
-            rt.close()
     assert counts[True] <= counts[False]

@@ -1,0 +1,151 @@
+"""Property tests for the scoring/α*-search layer (paper §6.2).
+
+Three families:
+
+* ``saturation_multiplier_bisect`` ≡ the 117-point grid scan on randomized
+  score curves (within the bisection's documented contract: non-final
+  saturated runs no longer than ``confirm`` grid points — exactly the
+  contention-dip shape the confirmation scan exists for);
+* RtScore/scenario-score monotonicity in the period multiplier α (and in
+  the makespan);
+* ``deadline_satisfaction`` bounds and monotonicity.
+
+Runs under hypothesis when installed, else the deterministic fallback
+(tests/_hypothesis_compat.py).
+"""
+import math
+import random
+
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core.scoring import (
+    ALPHA_GRID,
+    deadline_satisfaction,
+    rt_score,
+    saturation_multiplier,
+    saturation_multiplier_bisect,
+    scenario_score,
+)
+
+CONFIRM = 4  # the bisection's confirmation-scan width (its default)
+
+
+def _random_curve(rng: random.Random):
+    """Score values over ALPHA_GRID: alternating saturated/unsaturated runs.
+
+    Non-final saturated runs are kept ≤ CONFIRM long (the bisection's
+    equivalence contract); a saturated tail — the usual physical shape —
+    is appended with high probability and may be arbitrarily long.
+    """
+    n = len(ALPHA_GRID)
+    scores = []
+    sat = rng.random() < 0.3
+    while len(scores) < n:
+        if sat:
+            length = rng.randint(1, CONFIRM)
+            scores.extend(rng.uniform(0.996, 1.0) for _ in range(length))
+        else:
+            length = rng.randint(1, 30)
+            scores.extend(rng.uniform(0.0, 0.99) for _ in range(length))
+        sat = not sat
+    scores = scores[:n]
+    if rng.random() < 0.6:
+        tail = rng.randint(1, 60)
+        for i in range(n - tail, n):
+            scores[i] = rng.uniform(0.996, 1.0)
+    return scores
+
+
+@given(st.integers(min_value=0, max_value=10**9))
+@settings(max_examples=60, deadline=None)
+def test_bisect_equals_grid_on_random_curves(seed):
+    rng = random.Random(seed)
+    scores = dict(zip(ALPHA_GRID, _random_curve(rng)))
+    evaluate = lambda a: scores[a]
+    grid = saturation_multiplier(evaluate)
+    bisect = saturation_multiplier_bisect(evaluate)
+    assert bisect.alpha_star == grid.alpha_star, (
+        seed, grid.alpha_star, bisect.alpha_star)
+    # the bisection probes a subset of the same lattice
+    assert {a for a, _ in bisect.scores} <= set(ALPHA_GRID)
+    assert len(bisect.scores) <= len(grid.scores)
+
+
+def test_bisect_equals_grid_edge_curves():
+    for curve in (
+        {a: 1.0 for a in ALPHA_GRID},                       # always saturated
+        {a: 0.0 for a in ALPHA_GRID},                       # never saturated
+        {a: (1.0 if a >= 3.0 else 0.5) for a in ALPHA_GRID},  # clean step
+        {a: (1.0 if a >= ALPHA_GRID[-1] else 0.2)
+         for a in ALPHA_GRID},                              # last point only
+        {a: (0.3 if a == ALPHA_GRID[-1] else 1.0)
+         for a in ALPHA_GRID},                              # dip at the end
+    ):
+        grid = saturation_multiplier(lambda a: curve[a])
+        bisect = saturation_multiplier_bisect(lambda a: curve[a])
+        assert bisect.alpha_star == grid.alpha_star
+
+
+@given(
+    st.floats(min_value=1e-6, max_value=10.0),
+    st.floats(min_value=1e-6, max_value=10.0),
+    st.floats(min_value=1.0, max_value=4.0),
+)
+@settings(max_examples=60, deadline=None)
+def test_rt_score_monotone_in_alpha_and_makespan(makespan, deadline, stretch):
+    # larger α (longer deadline) never lowers the score of a fixed makespan
+    assert rt_score(makespan, deadline * stretch) >= rt_score(makespan, deadline)
+    # a slower request never scores higher under a fixed deadline
+    assert rt_score(makespan * stretch, deadline) <= rt_score(makespan, deadline)
+    # bounds + degenerate cases
+    assert 0.0 <= rt_score(makespan, deadline) <= 1.0
+    assert rt_score(float("inf"), deadline) == 0.0
+    assert rt_score(makespan, 0.0) == 0.0
+
+
+@given(st.integers(min_value=0, max_value=10**9))
+@settings(max_examples=30, deadline=None)
+def test_scenario_score_monotone_in_alpha(seed):
+    rng = random.Random(seed)
+    groups = [
+        [rng.uniform(1e-4, 5e-2) for _ in range(rng.randint(1, 8))]
+        for _ in range(rng.randint(1, 3))
+    ]
+    base = [rng.uniform(1e-3, 2e-2) for _ in groups]
+    prev = -1.0
+    for alpha in (0.2, 0.5, 1.0, 2.0, 6.0):
+        score = scenario_score(groups, [alpha * p for p in base])
+        assert 0.0 <= score <= 1.0
+        assert score >= prev - 1e-12, "score not monotone in α"
+        prev = score
+
+
+@given(st.integers(min_value=0, max_value=10**9))
+@settings(max_examples=40, deadline=None)
+def test_deadline_satisfaction_bounds_and_monotonicity(seed):
+    rng = random.Random(seed)
+    groups = [
+        [rng.uniform(1e-4, 5e-2) if rng.random() < 0.9 else float("inf")
+         for _ in range(rng.randint(1, 8))]
+        for _ in range(rng.randint(1, 4))
+    ]
+    deadlines = [rng.uniform(1e-3, 2e-2) for _ in groups]
+    rate = deadline_satisfaction(groups, deadlines)
+    assert 0.0 <= rate <= 1.0
+    # longer deadlines never lower the hit rate
+    relaxed = deadline_satisfaction(groups, [3.0 * d for d in deadlines])
+    assert relaxed >= rate
+    # extremes
+    assert deadline_satisfaction(groups, [float("inf")] * len(groups)) == \
+        pytest.approx(
+            sum(1 for ms in groups for m in ms if not math.isinf(m))
+            / sum(len(ms) for ms in groups))
+    assert deadline_satisfaction(groups, [0.0] * len(groups)) == 0.0
+
+
+def test_deadline_satisfaction_group_mismatch_raises():
+    with pytest.raises(ValueError):
+        deadline_satisfaction([[1.0], [2.0]], [1.0])
+    assert deadline_satisfaction([], []) == 0.0
