@@ -26,6 +26,10 @@ Prints ``name,us_per_call,derived`` CSV rows. Sections:
             tiny GA, well under a minute. The default all-sections pass
             also uses smoke sizing; explicit selection (``run.py sweep``)
             or ``--full`` runs the full-size variant.
+* arrivals — the arrival-process axis: the same scenario compositions
+            under periodic vs jittered vs Poisson traffic, with each
+            method's α*, frequency-gain ratios and satisfaction rates per
+            process (smoke sizing on the default pass, like sweep).
 * roofline — per (arch × shape) roofline terms from the dry-run artifacts
              (EXPERIMENTS.md §Roofline)
 * kernels — Pallas kernel oracle agreement
@@ -544,6 +548,26 @@ def bench_conformance(args) -> None:
          f"overhead=x{t_rt / t_sim:.2f} vs fastsim")
 
 
+def _sweep_sizing(args, section: str, explicit_count: int,
+                  full_count: int = 10):
+    """(scenario count, SweepConfig) for a sweep-harness-backed section.
+
+    Full sizing when the section is selected explicitly or ``--full`` asks
+    for the paper's full protocol (matching fig12/fig15); otherwise — on
+    the default all-sections pass or with ``--smoke`` — a 2-scenario tiny
+    GA keeps the pass quick.
+    """
+    from repro.experiments import SweepConfig
+
+    explicit = getattr(args, "full", False) or section in (
+        getattr(args, "section", None), getattr(args, "only", None))
+    if getattr(args, "smoke", False) or not explicit:
+        return 2, SweepConfig(
+            pop_size=8, max_generations=6, min_generations=2, bm_max_evals=30,
+        )
+    return (full_count if args.full else explicit_count), SweepConfig()
+
+
 def bench_sweep(args) -> None:
     """Scenario-sweep harness smoke/regression: per-scenario α* + aggregates.
 
@@ -559,20 +583,10 @@ def bench_sweep(args) -> None:
     """
     import tempfile
 
-    from repro.experiments import METHODS, SweepConfig, generate_scenario_specs
+    from repro.experiments import METHODS, generate_scenario_specs
     from repro.experiments.sweep import run_sweep
 
-    # full sizing when the section is selected explicitly or --full asks for
-    # the paper's full protocol (matching fig12/fig15); otherwise the
-    # default all-sections pass stays quick with smoke sizing
-    explicit = getattr(args, "full", False) or "sweep" in (
-        getattr(args, "section", None), getattr(args, "only", None))
-    if getattr(args, "smoke", False) or not explicit:
-        count, config = 2, SweepConfig(
-            pop_size=8, max_generations=6, min_generations=2, bm_max_evals=30,
-        )
-    else:
-        count, config = (10 if args.full else 4), SweepConfig()
+    count, config = _sweep_sizing(args, "sweep", explicit_count=4)
     specs = generate_scenario_specs(count, seed=2025)
     t0 = time.perf_counter()
     with tempfile.TemporaryDirectory(prefix="puzzle_sweep_bench_") as run_dir:
@@ -597,6 +611,48 @@ def bench_sweep(args) -> None:
     again = [s.to_json() for s in generate_scenario_specs(count, seed=2025)]
     stored = [row["spec"] for row in doc["scenarios"]]
     emit("sweep.deterministic", 0.0, f"ok={again == stored}")
+
+
+def bench_arrivals(args) -> None:
+    """Puzzle vs baselines under bursty load (the arrival-process axis).
+
+    Evaluates the same randomly drawn scenario compositions under three
+    arrival processes — periodic (the paper's sources), jittered (uniform
+    ±25% of Φ) and Poisson (exponential inter-arrivals at rate 1/Φ) — and
+    reports each method's median α*, the geo-mean frequency gains and the
+    deadline-satisfaction rate at α = 1. The compositions are identical
+    across processes (only the traffic changes), so the drop from the
+    ``periodic`` rows to the ``poisson`` rows is the price of burstiness,
+    and the gain ratios show whether Puzzle's advantage survives it.
+    Smoke sizing applies on the default all-sections pass (explicit
+    selection or ``--full`` runs the harness's real GA sizing).
+    """
+    import tempfile
+
+    from repro.experiments import METHODS, generate_scenario_specs
+    from repro.experiments.sweep import run_sweep
+
+    count, config = _sweep_sizing(args, "arrivals", explicit_count=3,
+                                  full_count=6)
+    for kind in ("periodic", "jittered", "poisson"):
+        specs = generate_scenario_specs(count, seed=2025, arrival=kind)
+        t0 = time.perf_counter()
+        with tempfile.TemporaryDirectory(
+                prefix=f"puzzle_arrivals_{kind}_") as run_dir:
+            doc = run_sweep(specs, config, run_dir=run_dir, workers=1)
+        wall = time.perf_counter() - t0
+        for row in doc["scenarios"]:
+            stars = ";".join(
+                f"{m}={'never' if row['alpha_star'][m] is None else row['alpha_star'][m]}"
+                for m in METHODS)
+            emit(f"arrivals.{kind}.{row['spec']['name']}",
+                 row["wall_s"] * 1e6, stars)
+        agg = doc["aggregate"]
+        sat = agg["satisfaction_rate"]
+        emit(f"arrivals.{kind}.gain", wall * 1e6 / count,
+             f"vs_npu={agg['speedup_geomean']['vs_npu_only']:.2f}x;"
+             f"vs_bm={agg['speedup_geomean']['vs_best_mapping']:.2f}x;"
+             + ";".join(f"sat_{m}={sat[m]:.2f}" for m in METHODS))
 
 
 def bench_roofline(args) -> None:
@@ -660,6 +716,7 @@ SECTIONS = {
     "simspeed": bench_simspeed,
     "conformance": bench_conformance,
     "sweep": bench_sweep,
+    "arrivals": bench_arrivals,
     "roofline": bench_roofline,
     "kernels": bench_kernels,
 }

@@ -1,5 +1,11 @@
 """Puzzle core: the paper's contribution — GA-based multi-model scheduling."""
 from .analyzer import AnalyzerConfig, StaticAnalyzer
+from .arrivals import (
+    ARRIVAL_KINDS,
+    ArrivalSpec,
+    arrival_horizon,
+    draw_arrivals,
+)
 from .baselines import best_mapping_solutions, npu_only_solution
 from .batchsim import (
     BatchLane,
@@ -51,6 +57,7 @@ from .scenarios import (
 )
 from .scoring import (
     SaturationResult,
+    absolute_deadlines,
     bisect_alpha_probes,
     deadline_satisfaction,
     group_scores,

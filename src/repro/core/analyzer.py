@@ -16,6 +16,7 @@ from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from .arrivals import ArrivalSpec
 from .baselines import best_mapping_solutions, npu_only_solution
 from .batchsim import BatchLane, batch_objectives, run_batch
 from .chromosome import Solution, SolutionFactory, decode_solution
@@ -94,6 +95,13 @@ class StaticAnalyzer:
         self.executables = executables
         self.best_times = best_model_times(scenario.graphs, processors, profiler)
         self.base_periods = base_periods(scenario, self.best_times)
+        # The scenario's request arrival process (None = periodic). Every
+        # simulation path below threads it through, and its content key
+        # participates in the objective cache key: two simulations of the
+        # same spec under different arrival processes are different results.
+        self.arrival: Optional[ArrivalSpec] = scenario.arrival
+        self._arrival_key = (self.arrival.key()
+                             if self.arrival is not None else None)
         self.factory = SolutionFactory(
             scenario.graphs, num_processors=len(processors),
         )
@@ -146,6 +154,7 @@ class StaticAnalyzer:
                    if measured else None),
             dispatch_overhead=self.cfg.dispatch_overhead if measured else 0.0,
             dispatch_pid=self.cfg.dispatch_pid,
+            arrivals=self.arrival,
         )
 
     # -- simulation ------------------------------------------------------------
@@ -189,6 +198,7 @@ class StaticAnalyzer:
                 noise=noise,
                 dispatch_overhead=dispatch_overhead,
                 dispatch_pid=self.cfg.dispatch_pid,
+                arrivals=self.arrival,
             )
             return sim.run(collect_tasks=collect_tasks)
         placed = decode_solution(solution, self.scenario.graphs)
@@ -204,6 +214,7 @@ class StaticAnalyzer:
             noise=noise,
             dispatch_overhead=dispatch_overhead,
             dispatch_pid=self.cfg.dispatch_pid,
+            arrivals=self.arrival,
         )
         return ref.run()
 
@@ -220,8 +231,11 @@ class StaticAnalyzer:
         engine = engine or self.cfg.engine
         key = None
         if engine == "fast":
+            # the arrival key is constant per analyzer today, but it MUST
+            # be part of the memo key: a cache shared or persisted across
+            # arrival processes would otherwise serve wrong results
             key = (self.solution_spec(solution).signature(), alpha,
-                   num_requests, measured)
+                   num_requests, measured, self._arrival_key)
             hit = self._objective_cache.get(key)
             if hit is not None:
                 self.objective_cache_hits += 1
@@ -265,7 +279,8 @@ class StaticAnalyzer:
         alpha = alpha if alpha is not None else self.cfg.search_alpha
         num_requests = num_requests or self.cfg.fast_requests
         keys = [
-            (self.solution_spec(s).signature(), alpha, num_requests, measured)
+            (self.solution_spec(s).signature(), alpha, num_requests, measured,
+             self._arrival_key)
             for s in solutions
         ]
         lane_of_key: Dict[Tuple, int] = {}
@@ -377,7 +392,8 @@ class StaticAnalyzer:
         lanes: List[BatchLane] = []
         keys: List[Tuple] = []
         for sol, alpha in requests:
-            key = (self.solution_spec(sol).signature(), alpha)
+            key = (self.solution_spec(sol).signature(), alpha,
+                   self._arrival_key)
             keys.append(key)
             if key not in lane_of_key:
                 lane_of_key[key] = len(lanes)
@@ -495,6 +511,7 @@ class StaticAnalyzer:
                 dispatch_overhead=(self.cfg.dispatch_overhead
                                    if measured else 0.0),
                 dispatch_pid=self.cfg.dispatch_pid,
+                arrivals=self.arrival,
             )
             return build_report("virtual", rt_res, sim, rel_tol=0.0)
         if mode != "real":
@@ -506,10 +523,10 @@ class StaticAnalyzer:
                            executables) as rt:
             states = rt.run_periodic(
                 [list(g) for g in self.scenario.groups], periods,
-                num_requests=num_requests,
+                num_requests=num_requests, arrivals=self.arrival,
             )
             rt_res = runtime_result(rt, states, periods, num_requests,
-                                    rebase=True)
+                                    rebase=True, arrivals=self.arrival)
         return build_report("real", rt_res, sim, rel_tol=rel_tol)
 
     def measure_on_runtime(
@@ -532,7 +549,7 @@ class StaticAnalyzer:
             rt.run_periodic(
                 [list(g) for g in self.scenario.groups],
                 [alpha * p for p in self.base_periods],
-                num_requests=num_requests,
+                num_requests=num_requests, arrivals=self.arrival,
             )
             return rt.measured_costs()
 

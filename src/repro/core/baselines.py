@@ -119,6 +119,13 @@ def best_mapping_solutions(
                 # candidate is non-dominated: rebuild archive from front 0
                 items = archive + [(cand, obj)]
                 archive = [items[i] for i in fronts[0]]
+                # prune keys whose archive entries the candidate just
+                # dominated — expanding them would spend the evaluation
+                # budget on neighborhoods of dead mappings. cand itself is
+                # fresh (it was absent from `evaluated`), so this append
+                # cannot duplicate a frontier entry.
+                live = {k for k, _ in archive}
+                frontier = [k for k in frontier if k in live]
                 frontier.append(cand)
     sols = []
     for key, obj in archive:

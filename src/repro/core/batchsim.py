@@ -4,8 +4,8 @@ The GA evaluates whole generations (population + offspring, 40–80
 candidates) and whole candidate sets (Pareto front × α lattice) against one
 scenario. :class:`BatchSimulator` runs *all* of those simulations in one
 numpy-vectorized event-stepping pass: every lane (one ``(solution spec,
-periods, num_requests, noise seed)`` tuple) advances in lock-step over a
-shared event frontier — each iteration pops the earliest pending event of
+periods, num_requests, noise seed, arrival spec)`` tuple) advances in
+lock-step over a shared event frontier — each iteration pops the earliest pending event of
 every live lane and applies all three event classes (request arrival,
 worker completion, work delivery) as masked array operations.
 
@@ -56,6 +56,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .arrivals import ArrivalSpec, arrival_horizon, draw_arrivals
 from .fastsim import FastSimSpec
 from .processors import Processor
 from .simulator import NoiseModel, RequestRecord, SimResult, TaskRecord
@@ -76,7 +77,8 @@ class BatchLane:
     Mirrors :class:`~repro.core.fastsim.FastSimulator`'s constructor
     arguments; ``noise_seed=None`` runs the lane clean (no draws), matching
     ``noise=None``. ``dispatch_overhead`` may differ per lane (the analyzer
-    mixes clean search evals and measured accurate evals in one batch).
+    mixes clean search evals and measured accurate evals in one batch), as
+    may the ``arrivals`` process (``None`` = periodic).
     """
 
     spec: FastSimSpec
@@ -86,6 +88,7 @@ class BatchLane:
     dispatch_overhead: float = 0.0
     dispatch_pid: int = 0
     overlap_comm: bool = False
+    arrivals: Optional[ArrivalSpec] = None
 
 
 @dataclass
@@ -254,11 +257,16 @@ class BatchSimulator:
         nr_max = int(nr.max())
         periods = np.zeros((W, G))
         horizon = np.zeros(W)
+        # per-lane arrival tables: the identical timestamps every other
+        # engine tier draws for the lane's (arrivals, periods, num_requests)
+        arrtab = np.zeros((W, G, max(nr_max, 1)))
         for b, ln in enumerate(lanes):
             periods[b] = ln.periods
+            tables = draw_arrivals(ln.arrivals, ln.periods, ln.num_requests)
+            for gi, tab in enumerate(tables):
+                arrtab[b, gi, :len(tab)] = tab
             # same float expression as the per-solution engines
-            horizon[b] = max(
-                (ln.num_requests + 2) * max(ln.periods) * 4.0, 1.0)
+            horizon[b] = arrival_horizon(tables, ln.periods, ln.num_requests)
         dispatch_ov = np.array([ln.dispatch_overhead for ln in lanes])
         dispatch_pid = np.array([ln.dispatch_pid for ln in lanes], np.int64)
         dispatch_known = (dispatch_ov > 0) & np.isin(dispatch_pid,
@@ -482,8 +490,22 @@ class BatchSimulator:
             if bi.size:
                 gid = ci[bi]
                 rid = src_rid[bi, gid]
-                rr = gid * nr_max + rid
                 t = now[bi]
+                # rid-0 deferral: a non-zero first arrival re-arms the source
+                # column (the reference source's init-then-timeout order)
+                a0 = arrtab[bi, gid, 0]
+                defer = (rid == 0) & (a0 > t)
+                db = bi[defer]
+                if db.size:
+                    dg = gid[defer]
+                    td = t[defer]
+                    times[db, dg] = td + (a0[defer] - td)
+                    seqs[db, dg] = seq[db]
+                    seq[db] += 1
+                    bi, gid, rid, t = (bi[~defer], gid[~defer], rid[~defer],
+                                       t[~defer])
+            if bi.size:
+                rr = gid * nr_max + rid
                 arrival[bi, rr] = t
                 pend[bi, rr] = dep_cnt[bi]
                 for j in range(jmax):
@@ -499,7 +521,7 @@ class BatchSimulator:
                 if hb.size:
                     hg = gid[has]
                     tn = t[has]
-                    arr = nrid[has].astype(np.float64) * periods[hb, hg]
+                    arr = arrtab[hb, hg, nrid[has]]
                     # reference: push(.., now + (arrival - now), ..)
                     times[hb, hg] = tn + (arr - tn)
                     seqs[hb, hg] = seq[hb]

@@ -32,6 +32,7 @@ import random
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from .arrivals import ArrivalSpec, arrival_horizon, draw_arrivals
 from .chromosome import BACKENDS, DTYPES, PlacedSubgraph, subgraph_processor
 from .comm import PiecewiseLinearCommModel
 from .processors import Processor
@@ -431,6 +432,7 @@ class FastSimulator:
         noise: Optional[NoiseModel] = None,
         dispatch_overhead: float = 0.0,
         dispatch_pid: int = 0,
+        arrivals: Optional[ArrivalSpec] = None,
     ):
         self.spec = spec
         self.groups = groups
@@ -440,6 +442,8 @@ class FastSimulator:
         self.noise = noise
         self.dispatch_overhead = dispatch_overhead
         self.dispatch_pid = dispatch_pid
+        # request-source arrival process; None = periodic (arrival = rid·Φ)
+        self.arrivals = arrivals
 
     @classmethod
     def from_placed(
@@ -456,6 +460,7 @@ class FastSimulator:
         noise: Optional[NoiseModel] = None,
         dispatch_overhead: float = 0.0,
         dispatch_pid: int = 0,
+        arrivals: Optional[ArrivalSpec] = None,
     ) -> "FastSimulator":
         """Build spec + simulator with :class:`RuntimeSimulator`'s signature."""
         spec = build_spec(placed, processors, profiler, comm_model, input_home_pid)
@@ -463,6 +468,7 @@ class FastSimulator:
             spec, groups, periods, num_requests=num_requests,
             overlap_comm=overlap_comm, noise=noise,
             dispatch_overhead=dispatch_overhead, dispatch_pid=dispatch_pid,
+            arrivals=arrivals,
         )
 
     def run(self, collect_tasks: bool = True) -> SimResult:
@@ -501,6 +507,8 @@ class FastSimulator:
         req_records: Dict[Tuple[int, int], RequestRecord] = {}
         roots = spec.roots()
 
+        arrival_tables = draw_arrivals(
+            self.arrivals, self.periods, self.num_requests)
         events: list = []
         push = heapq.heappush
         pop = heapq.heappop
@@ -511,7 +519,8 @@ class FastSimulator:
             push(events, (0.0, seq, _SRC, gid, 0))
             seq += 1
 
-        horizon = max((self.num_requests + 2) * max(self.periods) * 4.0, 1.0)
+        horizon = arrival_horizon(
+            arrival_tables, self.periods, self.num_requests)
 
         while events and events[0][0] <= horizon:
             now, _, code, pid, item = pop(events)
@@ -552,6 +561,14 @@ class FastSimulator:
                     idle[pid] = True
             else:  # _SRC
                 gid, rid = pid, item
+                if rid == 0 and arrival_tables[gid][0] > now:
+                    # non-zero first arrival: the reference source fires its
+                    # init at t=0 and *then* times out to the first arrival —
+                    # deferring here reproduces that heap-sequence order
+                    arrival = arrival_tables[gid][0]
+                    push(events, (now + (arrival - now), seq, _SRC, gid, 0))
+                    seq += 1
+                    continue
                 rr = RequestRecord(
                     group=gid, request=rid, arrival=now,
                     total_tasks=group_tasks[gid],
@@ -570,7 +587,7 @@ class FastSimulator:
                             push(items[rpid],
                                  ((prio_of[g], release_seq), (g, rr, pend)))
                 if rid + 1 < self.num_requests:
-                    arrival = (rid + 1) * self.periods[gid]
+                    arrival = arrival_tables[gid][rid + 1]
                     push(events, (now + (arrival - now), seq, _SRC, gid, rid + 1))
                     seq += 1
 
@@ -616,6 +633,8 @@ class FastSimulator:
         # per-network flat ids of dependency-free subgraphs, released at arrival
         roots = spec.roots()
 
+        arrival_tables = draw_arrivals(
+            self.arrivals, self.periods, self.num_requests)
         events: list = []
         push = heapq.heappush
         pop = heapq.heappop
@@ -624,7 +643,8 @@ class FastSimulator:
         now = 0.0
 
         # request sources fire in group order at t=0, like the reference
-        # sim's Process init events.
+        # sim's Process init events; a non-zero first arrival defers inside
+        # the _SRC handler (mirroring the reference source's first timeout).
         for gid in range(len(self.groups)):
             push(events, (0.0, seq, _SRC, gid, 0))
             seq += 1
@@ -661,7 +681,8 @@ class FastSimulator:
             else:
                 push(items[pid], ((0, prio_of[g], release_seq), item))
 
-        horizon = max((self.num_requests + 2) * max(self.periods) * 4.0, 1.0)
+        horizon = arrival_horizon(
+            arrival_tables, self.periods, self.num_requests)
 
         while events and events[0][0] <= horizon:
             now, _, code, pid, item = pop(events)
@@ -714,6 +735,13 @@ class FastSimulator:
                     idle[pid] = True
             else:  # _SRC
                 gid, rid = pid, item  # payload slots carry (gid, rid)
+                if rid == 0 and arrival_tables[gid][0] > now:
+                    # defer to the first arrival (reference-source timeout
+                    # order: init fires at t=0, then times out)
+                    arrival = arrival_tables[gid][0]
+                    push(events, (now + (arrival - now), seq, _SRC, gid, 0))
+                    seq += 1
+                    continue
                 rr = RequestRecord(
                     group=gid, request=rid, arrival=now,
                     total_tasks=group_tasks[gid],
@@ -724,7 +752,7 @@ class FastSimulator:
                     for g in roots[n]:
                         release(gid, rid, g, rr, pend)
                 if rid + 1 < self.num_requests:
-                    arrival = (rid + 1) * self.periods[gid]
+                    arrival = arrival_tables[gid][rid + 1]
                     # reference sim computes `timeout(arrival - now)`; keep the
                     # same float expression so tie-breaking stays identical
                     push(events, (now + (arrival - now), seq, _SRC, gid, rid + 1))

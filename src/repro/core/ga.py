@@ -176,6 +176,36 @@ class GeneticScheduler:
             return cand
         return sol
 
+    # -- mating ----------------------------------------------------------------
+    def _mate(self, parents: Sequence[Solution]) -> List[Solution]:
+        """Pair the (already shuffled) parents and produce offspring.
+
+        Adjacent parents mate pairwise. An odd population leaves one
+        shuffled parent over; it mates a uniformly drawn partner from the
+        rest (itself when the population is a singleton) instead of
+        silently sitting the generation out — ``zip(parents[0::2],
+        parents[1::2])`` alone drops the last parent from mating every
+        generation. Even populations consume exactly the same RNG stream
+        as before the fix (the extra draw happens only on the odd path).
+        """
+        cfg = self.cfg
+        pairs = list(zip(parents[0::2], parents[1::2]))
+        if len(parents) % 2:
+            leftover = parents[-1]
+            partner = (parents[self.rng.randrange(len(parents) - 1)]
+                       if len(parents) > 1 else leftover)
+            pairs.append((leftover, partner))
+        offspring: List[Solution] = []
+        for a, b in pairs:
+            if self.rng.random() < cfg.cx_prob:
+                c1, c2 = self.factory.crossover(a, b)
+            else:
+                c1, c2 = a.copy(), b.copy()
+            c1 = self.factory.mutate(c1, cfg.p_bit, cfg.p_map, cfg.p_prio, cfg.p_cfg)
+            c2 = self.factory.mutate(c2, cfg.p_bit, cfg.p_map, cfg.p_prio, cfg.p_cfg)
+            offspring.extend([c1, c2])
+        return offspring
+
     # -- main loop ------------------------------------------------------------
     def run(self, seeds: Sequence[Solution] = ()) -> GAResult:
         cfg = self.cfg
@@ -196,15 +226,7 @@ class GeneticScheduler:
             # All candidates are parents (paper: avoid premature convergence).
             parents = pop[:]
             self.rng.shuffle(parents)
-            offspring: List[Solution] = []
-            for a, b in zip(parents[0::2], parents[1::2]):
-                if self.rng.random() < cfg.cx_prob:
-                    c1, c2 = self.factory.crossover(a, b)
-                else:
-                    c1, c2 = a.copy(), b.copy()
-                c1 = self.factory.mutate(c1, cfg.p_bit, cfg.p_map, cfg.p_prio, cfg.p_cfg)
-                c2 = self.factory.mutate(c2, cfg.p_bit, cfg.p_map, cfg.p_prio, cfg.p_cfg)
-                offspring.extend([c1, c2])
+            offspring = self._mate(parents)
             # whole-generation fast evaluation (batched when configured),
             # then the probabilistic local search pass per child
             for child, obj in zip(offspring, self._eval_generation(offspring)):

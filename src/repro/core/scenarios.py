@@ -2,12 +2,16 @@
 (paper §6.1, Fig. 11).
 
 A *model group* is a set of models triggered together by one input source
-(camera, microphone) at a fixed period. The base period of a group is
+(camera, microphone). The group's *base period* is
 
     φ̄_G = Σ_{m∈G} min_p τ_p(m) · N · (1 + ε)
 
 with N the number of groups and ε = 0.1; the evaluated period is
-Φ = α · φ̄_G for a period multiplier α.
+Φ = α · φ̄_G for a period multiplier α. The group's request *arrival
+process* defaults to strictly periodic at Φ (the paper's sources) but is
+pluggable per scenario — see :class:`~repro.core.arrivals.ArrivalSpec` for
+the jittered / Poisson / trace processes; Φ stays the mean inter-arrival
+interval and the per-request relative deadline in every case.
 """
 from __future__ import annotations
 
@@ -15,6 +19,7 @@ import random
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from .arrivals import ArrivalSpec
 from .chromosome import BACKENDS, DTYPES, PlacedSubgraph, Solution
 from .graph import ModelGraph
 from .processors import Processor
@@ -25,11 +30,20 @@ EPSILON = 0.1
 
 @dataclass(frozen=True)
 class Scenario:
-    """A workload: model graphs partitioned into synchronized groups."""
+    """A workload: model graphs partitioned into synchronized groups.
+
+    ``arrival`` selects the request arrival process shared by all of the
+    scenario's groups (``None`` = periodic at each group's period Φ —
+    byte-identical to the pre-arrival-layer behavior). The evaluation
+    stack (``StaticAnalyzer``, the batched engine, the virtual-clock
+    runtime) reads it from here, so one scenario object fully describes
+    the workload.
+    """
 
     name: str
     graphs: Tuple[ModelGraph, ...]
     groups: Tuple[Tuple[int, ...], ...]   # per group: indices into graphs
+    arrival: Optional[ArrivalSpec] = None
 
     @property
     def num_groups(self) -> int:
@@ -158,12 +172,15 @@ def build_scenario(
     name: str,
     group_model_names: Sequence[Sequence[str]],
     graph_factory: Dict[str, ModelGraph],
+    arrival: Optional[ArrivalSpec] = None,
 ) -> Scenario:
     """Materialize a scenario from model names; duplicates get unique graphs.
 
     ``group_model_names`` is a sequence of per-group name sequences (the
     shape produced by :func:`sample_groups` / :func:`random_scenarios`).
-    Deterministic: graph indices are assigned in iteration order.
+    ``arrival`` selects the scenario's request arrival process (``None`` =
+    periodic). Deterministic: graph indices are assigned in iteration
+    order.
     """
     graphs: List[ModelGraph] = []
     groups: List[Tuple[int, ...]] = []
@@ -173,4 +190,5 @@ def build_scenario(
             ids.append(len(graphs))
             graphs.append(graph_factory[n])
         groups.append(tuple(ids))
-    return Scenario(name=name, graphs=tuple(graphs), groups=tuple(groups))
+    return Scenario(name=name, graphs=tuple(graphs), groups=tuple(groups),
+                    arrival=arrival)

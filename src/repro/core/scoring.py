@@ -3,6 +3,21 @@
 Implements makespan aggregation, QoE score, Realtime score (k = 15),
 the combined scenario score, and the *saturation multiplier*
 α* = min{α | Score(α, S) = 1.0} used as the headline comparison metric.
+
+Deadline semantics under pluggable arrivals
+-------------------------------------------
+Request *i* of a group must finish by the **absolute** deadline
+``arrival_i + Φ`` where Φ is the group's (α-scaled) period — under
+periodic arrivals that degenerates to "finish before the next request",
+but the per-request form is what generalizes to jittered / Poisson /
+traced sources (:mod:`repro.core.arrivals`). Every function here takes
+*makespans*, which the simulators measure **relative to each request's own
+arrival** (``Θ_i = last_finish_i − arrival_i``; a task can never start
+before its request arrives), so the check ``Θ_i ≤ Φ`` is exactly the
+absolute-deadline check for any arrival process. ``deadline`` arguments
+throughout are therefore the *relative* deadline Φ, never an absolute
+timestamp; :func:`absolute_deadlines` materializes the per-request
+absolute form when a caller needs it (reports, trace tooling).
 """
 from __future__ import annotations
 
@@ -18,8 +33,21 @@ RT_K = 15.0  # sigmoid sharpness, same as XRBench
 ALPHA_GRID = tuple(round(0.2 + 0.05 * i, 4) for i in range(117))
 
 
+def absolute_deadlines(arrivals: Sequence[float], phi: float) -> List[float]:
+    """Per-request absolute deadlines ``arrival_i + Φ``.
+
+    The explicit form of the scoring contract above: request *i* arriving
+    at ``arrival_i`` must finish by ``arrival_i + Φ``. Equivalent to
+    checking the arrival-relative makespan against Φ, which is what the
+    scoring functions do; this helper exists for callers that work with
+    absolute trace timestamps instead of makespans.
+    """
+    return [a + phi for a in arrivals]
+
+
 def qoe_score(makespans: Sequence[float], deadline: float) -> float:
-    """Fraction of requests finishing within the deadline (= period)."""
+    """Fraction of requests finishing within the relative deadline Φ
+    (equivalently: by their absolute deadline ``arrival_i + Φ``)."""
     if not makespans:
         return 0.0
     ok = sum(1 for m in makespans if m <= deadline)

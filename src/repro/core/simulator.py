@@ -1,9 +1,10 @@
 """Discrete-event simulation of the Puzzle Runtime (paper §4.3 'Simulator').
 
 Replays the Coordinator → Worker → Engine workflow of §5.2 over a candidate
-solution: periodic requests per model group, subgraph tasks released when
-their dependencies resolve, per-processor non-preemptive workers draining
-priority queues, communication costs at processor boundaries and
+solution: per-group request sources (periodic by default; any
+:class:`~repro.core.arrivals.ArrivalSpec` process), subgraph tasks released
+when their dependencies resolve, per-processor non-preemptive workers
+draining priority queues, communication costs at processor boundaries and
 (de)quantization at dtype boundaries.
 
 Computation costs come from the device-in-the-loop :class:`Profiler`;
@@ -16,6 +17,7 @@ import random
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from .arrivals import ArrivalSpec, arrival_horizon, draw_arrivals
 from .chromosome import PlacedSubgraph
 from .comm import PiecewiseLinearCommModel, quantization_cost
 from .des import Environment, PriorityStore
@@ -198,6 +200,7 @@ class RuntimeSimulator:
         noise: Optional[NoiseModel] = None,
         dispatch_overhead: float = 0.0,
         dispatch_pid: int = 0,
+        arrivals: Optional[ArrivalSpec] = None,
     ):
         self.placed = placed
         self.processors = processors
@@ -209,6 +212,8 @@ class RuntimeSimulator:
         self.input_home_pid = input_home_pid
         self.overlap_comm = overlap_comm
         self.noise = noise
+        # request-source arrival process; None = periodic (arrival = rid·Φ)
+        self.arrivals = arrivals
         self._noise_rng = random.Random(noise.seed if noise else 0)
         # The Coordinator runs on the CPU (paper §6.3: dispatch/system work
         # makes the CPU a contended, fluctuating resource). Every task
@@ -299,9 +304,10 @@ class RuntimeSimulator:
                 rec.finished = env.now
                 task_done(gid, rid, net, k)
 
-        def request_source(gid: int, nets: Sequence[int], period: float):
+        def request_source(gid: int, nets: Sequence[int],
+                           table: Sequence[float]):
             for rid in range(self.num_requests):
-                arrival = rid * period
+                arrival = table[rid]
                 if arrival > env.now:
                     yield env.timeout(arrival - env.now)
                 total_tasks = sum(len(self.placed[n]) for n in nets)
@@ -315,17 +321,19 @@ class RuntimeSimulator:
                         if d == 0:
                             release(gid, rid, n, k)
 
+        # one shared table per run: every engine tier draws the identical
+        # arrival timestamps (periodic when self.arrivals is None)
+        arrival_tables = draw_arrivals(
+            self.arrivals, self.periods, self.num_requests)
         for proc in self.processors:
             env.process(worker(proc))
-        for gid, (nets, period) in enumerate(zip(self.groups, self.periods)):
-            env.process(request_source(gid, nets, period))
+        for gid, nets in enumerate(self.groups):
+            env.process(request_source(gid, nets, arrival_tables[gid]))
 
         # run to quiescence with a generous horizon: all requests issued plus
-        # slack for stragglers.
-        horizon = max(
-            (self.num_requests + 2) * max(self.periods) * 4.0,
-            1.0,
-        )
+        # slack for stragglers (periodic: the historical expression verbatim).
+        horizon = arrival_horizon(
+            arrival_tables, self.periods, self.num_requests)
         env.run(until=horizon)
         return SimResult(
             requests=sorted(req_records.values(), key=lambda r: (r.group, r.request)),

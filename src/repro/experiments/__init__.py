@@ -23,7 +23,12 @@ from .evaluate import (
     default_context,
     evaluate_scenario,
 )
-from .specs import ScenarioSpec, generate_scenario_specs, scenario_stream_seed
+from .specs import (
+    ScenarioSpec,
+    arrival_stream_seed,
+    generate_scenario_specs,
+    scenario_stream_seed,
+)
 
 __all__ = [
     "METHODS",
@@ -32,6 +37,7 @@ __all__ = [
     "ScenarioSpec",
     "SweepConfig",
     "aggregate_results",
+    "arrival_stream_seed",
     "default_context",
     "evaluate_scenario",
     "format_summary",

@@ -11,11 +11,18 @@ paper applies to every randomly generated scenario:
 
 All times are **seconds**. Every stochastic stage is explicitly seeded: the
 GA stream, the baseline's neighbor shuffle, and the satisfaction-rate noise
-stream all derive from ``spec.seed``, while the measured-noise stream
-inside the α*-search uses the analyzer's fixed default (identical across
+stream all derive from ``spec.seed``; the request *arrival* stream (when
+``spec.arrival`` selects a non-periodic process) carries its own SHA-256
+per-scenario seed inside the spec; and the measured-noise stream inside
+the α*-search uses the analyzer's fixed default (identical across
 scenarios). Either way a scenario's result is a pure function of ``(spec,
 config)`` — the property the multi-process sweep relies on for
 worker-count-independent output.
+
+Deadlines are per-request: request *i* must finish by ``arrival_i + Φ``
+with Φ the group's α-scaled base period — equivalent to checking the
+arrival-relative makespan against Φ, which is what the scoring layer does,
+so the same code is correct for periodic and bursty traffic alike.
 """
 from __future__ import annotations
 
@@ -241,7 +248,7 @@ def evaluate_scenario(
     t0 = time.perf_counter()
 
     scenario = build_scenario(spec.name, [list(g) for g in spec.groups],
-                              context.graphs)
+                              context.graphs, arrival=spec.arrival)
     analyzer = StaticAnalyzer(
         scenario, context.processors, context.profiler, context.comm_model,
         AnalyzerConfig(

@@ -1,13 +1,15 @@
 """Scenario specifications for the randomized sweep (paper §6.1).
 
 A :class:`ScenarioSpec` is the *replayable identity* of one randomly
-generated scenario: which models, grouped how, plus the integer seed the
-evaluation's explicitly seeded stages (GA stream, baseline hillclimb
-shuffle, satisfaction-rate noise) derive from. Specs serialize to/from plain JSON dicts so a sweep run
-directory is self-describing and resumable — re-running a sweep with the
-same ``(count, seed, size bounds)`` regenerates byte-identical specs, and
-the harness cross-checks stored results against the regenerated spec before
-reusing them.
+generated scenario: which models, grouped how, under which request
+*arrival process* (periodic / jittered / Poisson — the sweep's arrival
+axis), plus the integer seeds the evaluation's explicitly seeded stages
+(GA stream, baseline hillclimb shuffle, satisfaction-rate noise, arrival
+timestamps) derive from. Specs serialize to/from plain JSON dicts so a
+sweep run directory is self-describing and resumable — re-running a sweep
+with the same ``(count, seed, size bounds, arrival)`` regenerates
+byte-identical specs, and the harness cross-checks stored results against
+the regenerated spec before reusing them.
 
 Seed derivation is SHA-256 based (not ``hash()``) so it is stable across
 processes and interpreter runs regardless of ``PYTHONHASHSEED`` — the
@@ -20,6 +22,7 @@ import random
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from ..core.arrivals import ArrivalSpec
 from ..core.scenarios import sample_groups
 from ..zoo import MODEL_NAMES
 
@@ -36,20 +39,40 @@ def scenario_stream_seed(sweep_seed: int, index: int) -> int:
     return int.from_bytes(digest[:8], "big") >> 1
 
 
+def arrival_stream_seed(sweep_seed: int, index: int) -> int:
+    """Deterministic 63-bit per-scenario *arrival* seed.
+
+    Separate derivation domain from :func:`scenario_stream_seed` so the
+    arrival timestamps of scenario *i* are independent of its composition
+    draws — and, like them, SHA-256-based so the value is a constant of
+    ``(sweep_seed, index)`` across processes, worker counts and
+    ``PYTHONHASHSEED``.
+    """
+    digest = hashlib.sha256(
+        f"puzzle-arrival/{sweep_seed}/{index}".encode()).digest()
+    return int.from_bytes(digest[:8], "big") >> 1
+
+
 @dataclass(frozen=True)
 class ScenarioSpec:
-    """One randomized scenario: identity, composition, and RNG stream.
+    """One randomized scenario: identity, composition, RNG stream, arrivals.
 
     ``groups`` holds per-group tuples of model names from the nine-network
     zoo (duplicates across groups allowed; materialized as distinct graphs).
     ``seed`` is the scenario's private stream seed — the seeded evaluation
-    stages derive from it, never from global RNG state.
+    stages derive from it, never from global RNG state. ``arrival`` is the
+    scenario's request arrival process (``None`` = periodic, serialized by
+    omission so pre-arrival-axis run dirs still load); non-periodic specs
+    carry their own SHA-256-derived arrival seed
+    (:func:`arrival_stream_seed`), keeping results worker-count-invariant
+    and resumable exactly like the composition stream.
     """
 
     index: int
     name: str
     seed: int
     groups: Tuple[Tuple[str, ...], ...]
+    arrival: Optional[ArrivalSpec] = None
 
     @property
     def num_models(self) -> int:
@@ -57,12 +80,15 @@ class ScenarioSpec:
 
     def to_json(self) -> Dict[str, object]:
         """Plain-JSON dict (lists instead of tuples); inverse of :meth:`from_json`."""
-        return {
+        doc: Dict[str, object] = {
             "index": self.index,
             "name": self.name,
             "seed": self.seed,
             "groups": [list(g) for g in self.groups],
         }
+        if self.arrival is not None:
+            doc["arrival"] = self.arrival.to_json()
+        return doc
 
     @classmethod
     def from_json(cls, d: Dict[str, object]) -> "ScenarioSpec":
@@ -71,6 +97,8 @@ class ScenarioSpec:
             name=str(d["name"]),
             seed=int(d["seed"]),
             groups=tuple(tuple(g) for g in d["groups"]),
+            arrival=(ArrivalSpec.from_json(d["arrival"])
+                     if d.get("arrival") is not None else None),
         )
 
 
@@ -82,6 +110,9 @@ def generate_scenario_specs(
     max_groups: int = 3,
     min_models: int = 1,
     max_models: int = 4,
+    arrival: Optional[str] = None,
+    arrival_jitter: float = 0.25,
+    arrival_distribution: str = "uniform",
 ) -> List[ScenarioSpec]:
     """Generate ``count`` randomized scenario specs per the §6.1 recipe.
 
@@ -91,6 +122,14 @@ def generate_scenario_specs(
     ``random.Random(scenario_stream_seed(seed, i))`` stream, so the list is
     a pure function of the arguments and any prefix of it is stable under a
     larger ``count``.
+
+    ``arrival`` opens the sweep's arrival axis: ``None``/"periodic" keeps
+    the paper's periodic sources (and byte-identical spec JSON), while
+    "jittered" / "poisson" attach an :class:`ArrivalSpec` of that kind with
+    a per-scenario :func:`arrival_stream_seed` — the compositions stay
+    identical to the periodic sweep at the same ``seed``, only the traffic
+    changes. ``arrival_jitter``/``arrival_distribution`` parameterize the
+    jittered process.
     """
     specs: List[ScenarioSpec] = []
     for i in range(count):
@@ -101,8 +140,15 @@ def generate_scenario_specs(
             min_groups=min_groups, max_groups=max_groups,
             min_models=min_models, max_models=max_models,
         )
+        arrival_spec = None
+        if arrival is not None and arrival != "periodic":
+            arrival_spec = ArrivalSpec(
+                kind=arrival, jitter=arrival_jitter,
+                distribution=arrival_distribution,
+                seed=arrival_stream_seed(seed, i),
+            )
         specs.append(ScenarioSpec(
             index=i, name=f"sweep_s{seed}_{i:03d}", seed=stream,
-            groups=tuple(groups),
+            groups=tuple(groups), arrival=arrival_spec,
         ))
     return specs

@@ -21,8 +21,13 @@ wipes it.
 CLI::
 
     python -m repro.experiments.sweep --scenarios 30 --seed 0 --workers 4
+    python -m repro.experiments.sweep --scenarios 30 --arrival poisson
 
-See ``--help`` for GA sizing and scenario-shape knobs. Typical cost on a
+``--arrival {periodic,jittered,poisson}`` opens the arrival axis: the same
+scenario compositions evaluated under bursty traffic instead of the
+paper's periodic sources (per-scenario SHA-256 arrival seeds keep the
+determinism contract). See ``--help`` for GA sizing and scenario-shape
+knobs. Typical cost on a
 laptop-class CPU: a handful of seconds per scenario (GA pop 20 × ≤30
 generations plus three bisection α*-searches).
 """
@@ -225,6 +230,18 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--max-groups", type=int, default=3)
     ap.add_argument("--min-models", type=int, default=1)
     ap.add_argument("--max-models", type=int, default=4)
+    ap.add_argument("--arrival", default="periodic",
+                    choices=["periodic", "jittered", "poisson"],
+                    help="request arrival process per group (default: "
+                         "periodic, the paper's sources); non-periodic "
+                         "scenarios carry per-scenario SHA-256 arrival "
+                         "seeds, so results stay worker-count-invariant")
+    ap.add_argument("--arrival-jitter", type=float, default=0.25,
+                    help="jittered arrivals: max offset as a fraction of "
+                         "the group period (default 0.25)")
+    ap.add_argument("--arrival-distribution", default="uniform",
+                    choices=["uniform", "lognormal"],
+                    help="jitter distribution (default uniform)")
     ap.add_argument("--pop-size", type=int, default=20, help="GA population")
     ap.add_argument("--max-generations", type=int, default=30)
     ap.add_argument("--min-generations", type=int, default=10)
@@ -248,6 +265,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         args.scenarios, seed=args.seed,
         min_groups=args.min_groups, max_groups=args.max_groups,
         min_models=args.min_models, max_models=args.max_models,
+        arrival=args.arrival, arrival_jitter=args.arrival_jitter,
+        arrival_distribution=args.arrival_distribution,
     )
     config = SweepConfig(
         pop_size=args.pop_size,
@@ -258,7 +277,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         batch_workers=args.batch_workers,
         validate_runtime=args.validate_runtime,
     )
-    run_dir = args.run_dir or f"results/sweep_s{args.seed}_n{args.scenarios}"
+    run_dir = args.run_dir or (
+        f"results/sweep_s{args.seed}_n{args.scenarios}"
+        + ("" if args.arrival == "periodic" else f"_a{args.arrival}"))
 
     t0 = time.perf_counter()
     doc = run_sweep(specs, config, run_dir=run_dir, workers=args.workers,
@@ -269,6 +290,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         "workers": args.workers,
         "group_bounds": [args.min_groups, args.max_groups],
         "models_per_group_bounds": [args.min_models, args.max_models],
+        "arrival": args.arrival,
         "wall_s": time.perf_counter() - t0,
     }
     _write_json(args.out, doc)

@@ -25,6 +25,7 @@ import math
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from ..core.arrivals import ArrivalSpec
 from ..core.chromosome import Solution
 from ..core.fastsim import FastSimSpec
 from ..core.graph import ModelGraph
@@ -66,6 +67,7 @@ def runtime_result(
     periods: Sequence[float],
     num_requests: int,
     rebase: bool = False,
+    arrivals: Optional[ArrivalSpec] = None,
 ) -> SimResult:
     """Build a simulator-comparable :class:`SimResult` from a runtime run.
 
@@ -106,7 +108,8 @@ def runtime_result(
         requests=sorted(requests, key=lambda r: (r.group, r.request)),
         tasks=tasks,
         busy_time={pid: w.busy_time for pid, w in runtime.workers.items()},
-        horizon=PuzzleRuntime.sim_horizon(periods, num_requests),
+        horizon=PuzzleRuntime.sim_horizon(periods, num_requests,
+                                          arrivals=arrivals),
     )
 
 
@@ -121,13 +124,14 @@ def run_virtual_schedule(
     noise: Optional[NoiseModel] = None,
     dispatch_overhead: float = 0.0,
     dispatch_pid: int = 0,
+    arrivals: Optional[ArrivalSpec] = None,
 ) -> SimResult:
     """Execute a schedule on the virtual-clock runtime; return its trace.
 
     This is the fourth engine tier: the *actual* Coordinator/Worker
     dispatch code, replaying the spec's costs deterministically. The result
     is bit-comparable to ``FastSimulator(spec, ...).run(collect_tasks=True)``
-    with the same parameters.
+    with the same parameters (including the ``arrivals`` process).
     """
     rt = PuzzleRuntime(
         graphs, solution, processors,
@@ -138,8 +142,10 @@ def run_virtual_schedule(
         spec=spec,
     )
     with rt:
-        states = rt.run_periodic(groups, periods, num_requests=num_requests)
-        return runtime_result(rt, states, periods, num_requests)
+        states = rt.run_periodic(groups, periods, num_requests=num_requests,
+                                 arrivals=arrivals)
+        return runtime_result(rt, states, periods, num_requests,
+                              arrivals=arrivals)
 
 
 @dataclass

@@ -21,6 +21,7 @@ import time
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence
 
+from ..core.arrivals import ArrivalSpec, arrival_horizon, draw_arrivals
 from ..core.chromosome import PlacedSubgraph, Solution, decode_solution
 from ..core.fastsim import FastSimSpec
 from ..core.graph import ModelGraph
@@ -128,16 +129,23 @@ class PuzzleRuntime:
         periods: Sequence[float],
         num_requests: int = 10,
         timeout: float = 120.0,
+        arrivals: Optional[ArrivalSpec] = None,
     ) -> List[List[RequestState]]:
-        """Drive periodic requests per model group; returns states per group.
+        """Drive the request sources per model group; returns states per group.
 
+        ``arrivals`` selects the arrival process (``None`` = periodic, the
+        paper's sources); all processes draw their timestamps from the
+        shared :func:`~repro.core.arrivals.draw_arrivals` generator.
         Virtual mode reproduces the simulators' request sources exactly —
-        group sources fire at ``rid × period`` on the event clock and the
-        run stops at the same quiescence horizon, so overloaded schedules
-        drop the same requests the simulator drops (``makespan is None``).
+        group sources fire at the drawn arrival times on the event clock
+        and the run stops at the same quiescence horizon, so overloaded
+        schedules drop the same requests the simulator drops (``makespan
+        is None``).
         """
         if self.cfg.virtual:
-            return self._run_periodic_virtual(groups, periods, num_requests)
+            return self._run_sources_virtual(
+                groups, periods, num_requests, arrivals)
+        tables = draw_arrivals(arrivals, periods, num_requests)
         states: List[List[RequestState]] = [[] for _ in groups]
         t0 = time.perf_counter()
         issued = [0] * len(groups)
@@ -145,10 +153,10 @@ class PuzzleRuntime:
         while sum(issued) < total:
             now = time.perf_counter() - t0
             soonest = None
-            for g, period in enumerate(periods):
+            for g in range(len(groups)):
                 if issued[g] >= num_requests:
                     continue
-                due = issued[g] * period
+                due = tables[g][issued[g]]
                 if due <= now:
                     states[g].append(self.infer(groups[g], group=g))
                     issued[g] += 1
@@ -164,36 +172,56 @@ class PuzzleRuntime:
                 st.future.result(timeout=max(0.1, deadline - time.perf_counter()))
         return states
 
-    def _run_periodic_virtual(
+    def _run_sources_virtual(
         self,
         groups: Sequence[Sequence[int]],
         periods: Sequence[float],
         num_requests: int,
+        arrivals: Optional[ArrivalSpec] = None,
     ) -> List[List[RequestState]]:
         states: List[List[RequestState]] = [[] for _ in groups]
         clock = self.clock
+        tables = draw_arrivals(arrivals, periods, num_requests)
 
         def make_source(gid: int, rid: int):
             def fire() -> None:
                 states[gid].append(self.infer(groups[gid], group=gid))
                 if rid + 1 < num_requests:
-                    arrival = (rid + 1) * periods[gid]
+                    arrival = tables[gid][rid + 1]
                     # same float expression as the simulators' timeout
                     # (`now + (arrival - now)`), keeping tie-breaks identical
                     clock.schedule(arrival - clock.now(),
                                    make_source(gid, rid + 1))
             return fire
 
+        def make_init(gid: int):
+            # fires at t=0 like the simulators' source inits; a non-zero
+            # first arrival schedules a timeout (same heap-sequence order),
+            # a zero one issues synchronously
+            def init() -> None:
+                first = tables[gid][0]
+                if first > clock.now():
+                    clock.schedule(first - clock.now(), make_source(gid, 0))
+                else:
+                    make_source(gid, 0)()
+            return init
+
         for gid in range(len(groups)):
-            clock.schedule(0.0, make_source(gid, 0))
-        horizon = self.sim_horizon(periods, num_requests)
+            clock.schedule(0.0, make_init(gid))
+        horizon = arrival_horizon(tables, periods, num_requests)
         clock.run(until=horizon)
         return states
 
     @staticmethod
-    def sim_horizon(periods: Sequence[float], num_requests: int) -> float:
-        """The simulators' quiescence horizon, verbatim."""
-        return max((num_requests + 2) * max(periods) * 4.0, 1.0)
+    def sim_horizon(
+        periods: Sequence[float],
+        num_requests: int,
+        arrivals: Optional[ArrivalSpec] = None,
+    ) -> float:
+        """The simulators' quiescence horizon, verbatim (arrival-aware)."""
+        return arrival_horizon(
+            draw_arrivals(arrivals, periods, num_requests),
+            periods, num_requests)
 
     # -- measurement --------------------------------------------------------
     def measured_costs(self) -> Dict[str, float]:

@@ -14,6 +14,7 @@ buffer: producers hand consumers a reference to the same backing store
 from __future__ import annotations
 
 import threading
+import weakref
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -27,18 +28,49 @@ class PoolStats:
     mallocs: int = 0
     reuses: int = 0
     frees: int = 0
+    #: double-releases and foreign (never-acquired) buffers, ignored rather
+    #: than pooled — each one would otherwise alias or pollute the free list
+    rejected_frees: int = 0
     bytes_allocated: int = 0
     memcpy_bytes: int = 0
     memcpy_calls: int = 0
 
 
 class TensorPool:
-    """Chunk-granular buffer pool with free-list reuse."""
+    """Chunk-granular buffer pool with free-list reuse.
+
+    Outstanding buffers are tracked by backing-store identity: a release is
+    only honored for a base buffer this pool handed out and that is not
+    already back in the free list. That closes two corruption paths the
+    naive free list had — releasing the same buffer twice used to enqueue
+    it twice, so two later ``acquire`` calls returned views over **one**
+    backing store (silent data corruption); and releasing a foreign
+    non-chunk-rounded array created a free-list bucket keyed by its
+    unrounded ``nbytes`` that ``acquire`` (which only looks up rounded
+    sizes) could never serve, growing without bound. Both cases are now
+    ignored and counted in ``stats.rejected_frees``; honored releases
+    increment ``stats.frees`` on the pooled path too, so the §5.3 free-time
+    accounting adds up (``frees + rejected_frees`` = release calls).
+
+    Known limit: views carry no acquisition token, so a *stale* release of
+    a view whose backing store was already recycled to a new owner (release
+    → re-acquire → release the old view again) is indistinguishable from
+    the new owner's release — that is caller use-after-free, which no
+    free-list can detect without an ownership handle; the tracking here
+    defends against double-release and foreign buffers, not against a
+    caller that keeps using a view it already released.
+    """
 
     def __init__(self, enabled: bool = True):
         self.enabled = enabled
         self._free: Dict[int, List[np.ndarray]] = {}
         self._lock = threading.Lock()
+        # id(base) -> base for buffers handed out and not yet released.
+        # Weak values: a caller that drops its view without releasing must
+        # not pin the backing store (and a recycled id can then never match
+        # a stale entry — dead entries vanish with their array).
+        self._outstanding: "weakref.WeakValueDictionary[int, np.ndarray]" = (
+            weakref.WeakValueDictionary())
         self.stats = PoolStats()
 
     def _rounded(self, nbytes: int) -> int:
@@ -53,24 +85,34 @@ class TensorPool:
                 if bucket:
                     buf = bucket.pop()
                     self.stats.reuses += 1
+                    self._outstanding[id(buf)] = buf
                     return buf[:nbytes].view(dtype).reshape(shape)
         self.stats.mallocs += 1
         self.stats.bytes_allocated += size
         buf = np.empty(size, dtype=np.uint8)
+        if self.enabled:
+            with self._lock:
+                self._outstanding[id(buf)] = buf
         return buf[:nbytes].view(dtype).reshape(shape)
 
     def release(self, arr: np.ndarray) -> None:
         base = arr
         while base.base is not None:
             base = base.base
-        if not isinstance(base, np.ndarray) or base.dtype != np.uint8:
+        if not self.enabled:
             self.stats.frees += 1
             return
-        if self.enabled:
-            with self._lock:
-                self._free.setdefault(base.nbytes, []).append(base)
-        else:
+        with self._lock:
+            tracked = self._outstanding.pop(id(base), None)
+            if tracked is not base:
+                # double release (already back in the free list) or a
+                # foreign buffer this pool never handed out: pooling it
+                # would alias future acquisitions or leak unservable
+                # buckets, so ignore it.
+                self.stats.rejected_frees += 1
+                return
             self.stats.frees += 1
+            self._free.setdefault(base.nbytes, []).append(base)
 
     def stage(self, src: np.ndarray) -> np.ndarray:
         """Copy ``src`` into a pooled buffer (the marshalling path)."""

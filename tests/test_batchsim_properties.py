@@ -5,8 +5,11 @@ engines; every comparison demands *bit-identical* results (zero max-abs
 diff), not approximate agreement — the fast paths are exactness-preserving
 rewrites, so any ulp of drift is a bug. ``test_bulk_differential_parity``
 alone covers 200+ randomized cases with deterministic seeds (independent of
-whether real hypothesis is installed); the ``@given`` tests add shrinking
-and deeper generation when it is.
+whether real hypothesis is installed), and
+``test_bulk_differential_parity_arrivals`` adds 100+ cases with randomized
+arrival specs (jittered / Poisson / trace) replayed through all **four**
+tiers including the virtual-clock PuzzleRuntime; the ``@given`` tests add
+shrinking and deeper generation when hypothesis is installed.
 
 Also holds the genetic-operator invariants the engines rely on: UPMX keeps
 priorities a permutation, mutation keeps every gene in range.
@@ -17,6 +20,7 @@ import random
 from _hypothesis_compat import given, settings, st
 
 from repro.core import (
+    ArrivalSpec,
     BatchLane,
     BatchSimulator,
     FastSimulator,
@@ -141,6 +145,109 @@ def test_bulk_differential_parity():
         _run_three_engines(random.Random(0x90153 + seed), measured=True)
         cases += 1
     assert cases >= 200
+
+
+# -- arrival-process differential parity (all four tiers) ---------------------
+
+def _random_arrival(rng: random.Random, groups, periods, num_requests):
+    """A random non-trivial arrival spec (sometimes periodic as control)."""
+    kind = rng.choice(("periodic", "jittered", "jittered-lognormal",
+                       "poisson", "trace"))
+    if kind == "periodic":
+        return rng.choice((None, ArrivalSpec()))
+    if kind == "jittered":
+        return ArrivalSpec(kind="jittered", jitter=rng.uniform(0.05, 1.5),
+                           seed=rng.randrange(1 << 16))
+    if kind == "jittered-lognormal":
+        return ArrivalSpec(kind="jittered", distribution="lognormal",
+                           jitter=rng.uniform(0.1, 0.8),
+                           sigma=rng.uniform(0.1, 0.9),
+                           seed=rng.randrange(1 << 16))
+    if kind == "poisson":
+        return ArrivalSpec(kind="poisson", seed=rng.randrange(1 << 16))
+    # trace: random timestamps incl. ties, regressions and gaps — the
+    # generator's monotone-clamp path must keep all tiers in lock-step
+    trace = []
+    for gid, period in enumerate(periods):
+        n = rng.randint(0, num_requests + 2)
+        ts = [rng.uniform(0.0, num_requests * period) for _ in range(n)]
+        if ts and rng.random() < 0.5:
+            ts.sort()
+        if ts and rng.random() < 0.3:
+            ts[rng.randrange(len(ts))] = ts[0]  # force a tie
+        trace.append(tuple(ts))
+    return ArrivalSpec(kind="trace", trace=tuple(trace))
+
+
+def _run_four_engines(rng: random.Random, measured: bool):
+    """One random arrival-spec case through DES, fastsim, batchsim AND the
+    virtual-clock PuzzleRuntime; assert bit-identical traces."""
+    from repro.runtime.conformance import run_virtual_schedule
+
+    nets, groups, periods = _random_problem(rng)
+    fac = SolutionFactory(nets, num_processors=len(PROCS),
+                          rng=random.Random(rng.randrange(1 << 30)),
+                          cut_prob=rng.uniform(0.1, 0.5))
+    sol = fac.random_solution()
+    num_requests = rng.randint(3, 6)
+    arrivals = _random_arrival(rng, groups, periods, num_requests)
+    noise = NoiseModel(seed=rng.randrange(1 << 16)) if measured else None
+    dispatch = 150e-6 if measured else 0.0
+
+    placed = decode_solution(sol, nets)
+    ref = RuntimeSimulator(
+        placed=placed, processors=PROCS, profiler=PROFILER,
+        comm_model=PAPER_COMM_MODEL, groups=groups, periods=periods,
+        num_requests=num_requests, noise=noise, dispatch_overhead=dispatch,
+        arrivals=arrivals,
+    ).run()
+    spec = build_spec(placed, PROCS, PROFILER, PAPER_COMM_MODEL)
+    fast = FastSimulator(
+        spec, groups=groups, periods=periods, num_requests=num_requests,
+        noise=noise, dispatch_overhead=dispatch, arrivals=arrivals,
+    ).run(collect_tasks=True)
+    batch = BatchSimulator(
+        [BatchLane(spec=spec, periods=periods, num_requests=num_requests,
+                   noise=noise, dispatch_overhead=dispatch,
+                   arrivals=arrivals)],
+        groups, PROCS,
+    ).run(collect_tasks=True)
+    virtual = run_virtual_schedule(
+        nets, sol, PROCS, spec, groups, periods, num_requests,
+        noise=noise, dispatch_overhead=dispatch, arrivals=arrivals,
+    )
+    _assert_identical(ref, fast, "arrivals:fastsim-vs-des")
+    _assert_identical(ref, batch.result(0), "arrivals:batchsim-vs-des")
+    _assert_identical(ref, virtual, "arrivals:virtual-runtime-vs-des")
+    return arrivals
+
+
+def test_bulk_differential_parity_arrivals():
+    """100+ randomized arrival-spec cases, zero max-abs diff across all
+    FOUR engine tiers (reference DES, fastsim, batchsim, virtual-clock
+    PuzzleRuntime); half measured (noise + dispatch tokens)."""
+    cases = 0
+    kinds = set()
+    for seed in range(55):
+        spec = _run_four_engines(random.Random(0xA221E + seed),
+                                 measured=False)
+        kinds.add(spec.kind if spec is not None else "periodic")
+        cases += 1
+    for seed in range(55):
+        spec = _run_four_engines(random.Random(0x7A913 + seed),
+                                 measured=True)
+        kinds.add(spec.kind if spec is not None else "periodic")
+        cases += 1
+    assert cases >= 100
+    # the draw actually exercised every process family
+    assert kinds >= {"periodic", "jittered", "poisson", "trace"}, kinds
+
+
+@given(st.integers(min_value=0, max_value=1 << 30))
+@settings(max_examples=15, deadline=None)
+def test_property_parity_arrivals(seed):
+    rng = random.Random(seed)
+    _run_four_engines(rng, measured=rng.random() < 0.5)
 
 
 def test_bulk_parity_overload():

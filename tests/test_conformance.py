@@ -32,10 +32,10 @@ def _nets():
     ]
 
 
-def _analyzer(groups=((0,), (1,)), **cfg_kw):
+def _analyzer(groups=((0,), (1,)), arrival=None, **cfg_kw):
     nets = _nets()
     scenario = Scenario(name="conf", graphs=nets,
-                        groups=[list(g) for g in groups])
+                        groups=[list(g) for g in groups], arrival=arrival)
     return StaticAnalyzer(
         scenario, PROCS, Profiler(AnalyticMobileBackend(PROCS)),
         PAPER_COMM_MODEL, AnalyzerConfig(**cfg_kw),
@@ -65,6 +65,27 @@ def test_validate_on_runtime_virtual_zero_diff(measured):
         assert rep.max_finish_diff == 0.0
         assert rep.max_makespan_diff == 0.0
         assert rep.max_busy_diff == 0.0
+
+
+@pytest.mark.parametrize("arrival_kind", ["jittered", "poisson"])
+def test_validate_on_runtime_nonperiodic_zero_diff(arrival_kind):
+    """The conformance path honors the scenario's arrival process: the
+    virtual runtime and the simulator replay the same bursty sources and
+    still diff to zero (measured conditions: noise + dispatch tokens)."""
+    from repro.core import ArrivalSpec
+
+    an = _analyzer(arrival=ArrivalSpec(kind=arrival_kind, jitter=0.5,
+                                       seed=13))
+    for sol in _solutions(an.scenario.graphs, 2, seed=8):
+        rep = an.validate_on_runtime(sol, alpha=1.0, num_requests=8,
+                                     measured=True, seed=6)
+        assert rep.passed, rep.summary()
+        assert rep.ordering_match
+    # the replay really used the bursty sources: group-0 arrivals in the
+    # runtime trace are not equally spaced
+    arrivals = [r[2] for r in rep.runtime_trace["requests"] if r[0] == 0]
+    gaps = {round(b - a, 12) for a, b in zip(arrivals, arrivals[1:])}
+    assert len(gaps) > 1, "conformance replay ignored the arrival spec"
 
 
 def test_validate_on_runtime_overload_drops_match():

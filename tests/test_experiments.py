@@ -9,12 +9,14 @@ import pytest
 
 from repro.core import base_periods, best_model_times, build_scenario, sample_groups
 from repro.core.scoring import deadline_satisfaction
+from repro.core import ArrivalSpec
 from repro.experiments import (
     METHODS,
     ScenarioResult,
     ScenarioSpec,
     SweepConfig,
     aggregate_results,
+    arrival_stream_seed,
     default_context,
     generate_scenario_specs,
     geometric_mean,
@@ -67,6 +69,38 @@ def test_spec_json_roundtrip():
     spec = generate_scenario_specs(1, seed=9)[0]
     wire = json.loads(json.dumps(spec.to_json()))
     assert ScenarioSpec.from_json(wire) == spec
+
+
+# -- arrival axis (this PR) ---------------------------------------------------
+
+def test_arrival_axis_specs_deterministic():
+    base = generate_scenario_specs(4, seed=5)
+    poisson = generate_scenario_specs(4, seed=5, arrival="poisson")
+    # same compositions, only the traffic changes
+    assert [s.groups for s in poisson] == [s.groups for s in base]
+    assert all(s.arrival is None for s in base)
+    assert all(s.arrival.kind == "poisson" for s in poisson)
+    # per-scenario SHA-256 arrival seeds: stable, distinct, independent of
+    # the composition stream
+    seeds = [s.arrival.seed for s in poisson]
+    assert seeds == [arrival_stream_seed(5, i) for i in range(4)]
+    assert len(set(seeds)) == 4
+    assert generate_scenario_specs(4, seed=5, arrival="poisson") == poisson
+    # "periodic" is spelled the old way: no arrival key in the JSON at all,
+    # so pre-axis run dirs load (and resume) unchanged
+    assert generate_scenario_specs(2, seed=5, arrival="periodic") == base[:2]
+    assert "arrival" not in base[0].to_json()
+
+
+def test_arrival_axis_spec_json_roundtrip():
+    for kind, kw in (("poisson", {}),
+                     ("jittered", dict(arrival_jitter=0.4)),
+                     ("jittered", dict(arrival_jitter=0.2,
+                                       arrival_distribution="lognormal"))):
+        spec = generate_scenario_specs(2, seed=7, arrival=kind, **kw)[1]
+        wire = json.loads(json.dumps(spec.to_json()))
+        assert ScenarioSpec.from_json(wire) == spec
+        assert isinstance(ScenarioSpec.from_json(wire).arrival, ArrivalSpec)
 
 
 def test_base_period_follows_section_6_1_formula():
@@ -208,12 +242,42 @@ def test_sweep_resume_and_worker_determinism(tmp_path):
     assert _strip_wall(doc3) == _strip_wall(doc1)
 
 
-def test_evaluate_scenario_batch_path_identical():
+def test_sweep_arrival_axis_worker_determinism(tmp_path):
+    """The arrival axis preserves the sweep's determinism contract:
+    ``--workers 2`` reproduces ``--workers 1`` bit for bit, and resuming a
+    non-periodic run dir reuses the stored results."""
+    specs = generate_scenario_specs(2, seed=4, arrival="poisson")
+    doc1 = run_sweep(specs, TINY, run_dir=str(tmp_path / "w1"), workers=1)
+    for row in doc1["scenarios"]:
+        assert row["spec"]["arrival"]["kind"] == "poisson"
+    doc2 = run_sweep(specs, TINY, run_dir=str(tmp_path / "w2"), workers=2)
+    assert _strip_wall(doc2) == _strip_wall(doc1)
+    # resume path: stored non-periodic scenarios reload (spec match incl.
+    # the arrival block)
+    messages = []
+    doc3 = run_sweep(specs, TINY, run_dir=str(tmp_path / "w1"), workers=1,
+                     log=messages.append)
+    assert doc3 == doc1
+    assert any("resumed 2/2" in m for m in messages)
+    # and the traffic actually matters: the periodic sweep of the same
+    # compositions yields different results
+    doc4 = run_sweep(generate_scenario_specs(2, seed=4), TINY,
+                     run_dir=str(tmp_path / "p"), workers=1)
+    strip1, strip4 = _strip_wall(doc1), _strip_wall(doc4)
+    for row in strip1["scenarios"] + strip4["scenarios"]:
+        row.pop("spec")
+    assert strip1 != strip4
+
+
+@pytest.mark.parametrize("arrival", [None, "poisson"])
+def test_evaluate_scenario_batch_path_identical(arrival):
     """use_batch routes α*-search + satisfaction through batchsim; the
-    per-scenario result must be bit-identical (wall time aside)."""
+    per-scenario result must be bit-identical (wall time aside) — under
+    periodic and non-periodic arrivals alike (the batch lanes must carry
+    the scenario's arrival spec)."""
     from repro.experiments.evaluate import evaluate_scenario
 
-    spec = generate_scenario_specs(2, seed=2025)[1]
+    spec = generate_scenario_specs(2, seed=2025, arrival=arrival)[1]
     kw = dict(pop_size=8, max_generations=4, min_generations=2,
               bm_max_evals=24)
     plain = evaluate_scenario(spec, SweepConfig(**kw)).to_json()

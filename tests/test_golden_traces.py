@@ -24,6 +24,7 @@ import sys
 import pytest
 
 from repro.core import (
+    ArrivalSpec,
     BatchLane,
     BatchSimulator,
     FastSimulator,
@@ -93,25 +94,34 @@ def _nets_runtime_conformance():
     ]
 
 
-#: name -> (nets, groups, periods, num_requests, noise seed, dispatch, pin)
+#: name -> (nets, groups, periods, num_requests, noise seed, dispatch, pin,
+#:          arrivals)
 SCENARIOS = {
     "tri_chain_clean": (
-        _nets_tri_chain, [[0, 1, 2]], [0.005], 8, None, 0.0, None),
+        _nets_tri_chain, [[0, 1, 2]], [0.005], 8, None, 0.0, None, None),
     "diamond_mix_measured": (
         _nets_diamond_mix, [[0, 1], [2, 3]], [0.004, 0.006], 6, 7, 150e-6,
-        None),
+        None, None),
     "diamond_mix_overload": (
-        _nets_diamond_mix, [[0, 1], [2, 3]], [2e-6, 2e-6], 30, None, 0.0, 0),
+        _nets_diamond_mix, [[0, 1], [2, 3]], [2e-6, 2e-6], 30, None, 0.0, 0,
+        None),
     # the device-in-the-loop tier's canonical trace (PR 4): replayed through
     # all four engine tiers including the virtual-clock PuzzleRuntime
     "runtime_conformance": (
         _nets_runtime_conformance, [[0, 2], [1]], [0.035, 0.05], 8, 3,
-        150e-6, None),
+        150e-6, None, None),
+    # non-periodic arrivals (PR 5): Poisson traffic + noise + dispatch
+    # tokens — the bursty-load canonical trace, replayed through all four
+    # tiers with the shared pre-drawn arrival-timestamp stream
+    "poisson_burst_measured": (
+        _nets_diamond_mix, [[0, 1], [2, 3]], [0.004, 0.006], 8, 5, 150e-6,
+        None, ArrivalSpec(kind="poisson", seed=42)),
 }
 
 
 def _run_reference(name):
-    nets_fn, groups, periods, nr, noise_seed, dispatch, pin = SCENARIOS[name]
+    (nets_fn, groups, periods, nr, noise_seed, dispatch, pin,
+     arrivals) = SCENARIOS[name]
     nets = nets_fn()
     sol = _solution(nets, seed=11, pin=pin)
     placed = decode_solution(sol, nets)
@@ -120,8 +130,9 @@ def _run_reference(name):
         placed=placed, processors=PROCS, profiler=PROFILER,
         comm_model=PAPER_COMM_MODEL, groups=groups, periods=periods,
         num_requests=nr, noise=noise, dispatch_overhead=dispatch,
+        arrivals=arrivals,
     ).run()
-    return nets, sol, groups, periods, nr, noise, dispatch, res
+    return nets, sol, groups, periods, nr, noise, dispatch, arrivals, res
 
 
 # single schema source: the runtime conformance harness serializes the same
@@ -143,6 +154,39 @@ def _assert_matches_golden(res, golden, engine):
         assert g == w, (engine, "task", i, g, w)
 
 
+def _engine_results(name):
+    """Replay one golden scenario through all four engine tiers.
+
+    The single construction site for both the pytest parity test and the
+    CI ``--check`` gate — a new engine parameter (like ``arrivals`` in this
+    PR) cannot silently reach only one of the two.
+    """
+    (nets, sol, groups, periods, nr, noise, dispatch, arrivals,
+     ref) = _run_reference(name)
+    spec = build_spec(decode_solution(sol, nets), PROCS, PROFILER,
+                      PAPER_COMM_MODEL)
+    return {
+        "reference-des": ref,
+        "fastsim": FastSimulator(
+            spec, groups=groups, periods=periods, num_requests=nr,
+            noise=noise, dispatch_overhead=dispatch, arrivals=arrivals,
+        ).run(collect_tasks=True),
+        "batchsim": BatchSimulator(
+            [BatchLane(spec=spec, periods=periods, num_requests=nr,
+                       noise=noise, dispatch_overhead=dispatch,
+                       arrivals=arrivals)],
+            groups, PROCS,
+        ).run(collect_tasks=True).result(0),
+        # fourth tier: the actual Coordinator/Worker dispatch code replaying
+        # the spec's costs on the virtual clock — the device-in-the-loop
+        # conformance path must reproduce the same trace bit for bit
+        "virtual-runtime": run_virtual_schedule(
+            nets, sol, PROCS, spec, groups, periods, nr,
+            noise=noise, dispatch_overhead=dispatch, arrivals=arrivals,
+        ),
+    }
+
+
 @pytest.mark.parametrize("name", sorted(SCENARIOS))
 def test_golden_trace(name):
     path = os.path.join(GOLDEN_DIR, f"{name}.json")
@@ -151,33 +195,8 @@ def test_golden_trace(name):
         f"`PYTHONPATH=src python tests/test_golden_traces.py --regen`")
     with open(path) as f:
         golden = json.load(f)
-    nets, sol, groups, periods, nr, noise, dispatch, ref = _run_reference(name)
-
-    _assert_matches_golden(ref, golden, "reference-des")
-
-    spec = build_spec(decode_solution(sol, nets), PROCS, PROFILER,
-                      PAPER_COMM_MODEL)
-    fast = FastSimulator(
-        spec, groups=groups, periods=periods, num_requests=nr,
-        noise=noise, dispatch_overhead=dispatch,
-    ).run(collect_tasks=True)
-    _assert_matches_golden(fast, golden, "fastsim")
-
-    batch = BatchSimulator(
-        [BatchLane(spec=spec, periods=periods, num_requests=nr,
-                   noise=noise, dispatch_overhead=dispatch)],
-        groups, PROCS,
-    ).run(collect_tasks=True)
-    _assert_matches_golden(batch.result(0), golden, "batchsim")
-
-    # fourth tier: the actual Coordinator/Worker dispatch code replaying the
-    # spec's costs on the virtual clock — the device-in-the-loop
-    # conformance path must reproduce the same trace bit for bit
-    virtual = run_virtual_schedule(
-        nets, sol, PROCS, spec, groups, periods, nr,
-        noise=noise, dispatch_overhead=dispatch,
-    )
-    _assert_matches_golden(virtual, golden, "virtual-runtime")
+    for engine, res in _engine_results(name).items():
+        _assert_matches_golden(res, golden, engine)
 
 
 def test_golden_traces_have_interesting_structure():
@@ -206,6 +225,17 @@ def test_golden_traces_have_interesting_structure():
     assert any(m is None for m in overload["makespans"]), (
         "overload trace dropped no requests")
     assert any(m is not None for m in overload["makespans"])
+    # the bursty trace must actually be non-periodic: inter-arrival gaps
+    # within a group vary (and some request still completes under load)
+    with open(os.path.join(GOLDEN_DIR, "poisson_burst_measured.json")) as f:
+        burst = json.load(f)
+    arrivals_g0 = [r[2] for r in burst["requests"] if r[0] == 0]
+    gaps = [b - a for a, b in zip(arrivals_g0, arrivals_g0[1:])]
+    assert len(set(round(g, 12) for g in gaps)) > 1, (
+        "poisson golden trace has periodic arrivals")
+    assert any(m is not None for m in burst["makespans"])
+    # noise + dispatch exercised on the bursty path too
+    assert any(t[8] > 0 for t in burst["tasks"]), "no cross-processor comm"
 
 
 def regenerate():
@@ -221,8 +251,73 @@ def regenerate():
               f"{len(doc['requests'])} requests")
 
 
+def _trace_diff(got, golden):
+    """Scalar summary of got-vs-golden: max abs diffs + exact-match flag."""
+    diffs = {
+        "horizon": abs(got["horizon"] - golden["horizon"]),
+        "busy_time": max(
+            (abs(got["busy_time"].get(k, 0.0) - golden["busy_time"].get(k, 0.0))
+             for k in set(got["busy_time"]) | set(golden["busy_time"])),
+            default=0.0),
+        "task_count": abs(len(got["tasks"]) - len(golden["tasks"])),
+        "request_count": abs(len(got["requests"]) - len(golden["requests"])),
+    }
+    ms = 0.0
+    for a, b in zip(got["makespans"], golden["makespans"]):
+        if a is None and b is None:
+            continue
+        if a is None or b is None:
+            ms = float("inf")
+            break
+        ms = max(ms, abs(a - b))
+    diffs["makespan"] = ms
+    t = 0.0
+    for a, b in zip(got["tasks"], golden["tasks"]):
+        if a[:5] != b[:5]:  # (group, request, net, sg, processor) ordering
+            t = float("inf")
+            break
+        t = max(t, max(abs(x - y) for x, y in zip(a[5:], b[5:])))
+    diffs["task_fields"] = t
+    diffs["exact"] = got == golden
+    return diffs
+
+
+def check(out_path=None):
+    """Replay every golden scenario through all four engine tiers and
+    report max-abs trace diffs (the CI gate; writes a JSON artifact).
+
+    Returns the number of (scenario, engine) pairs that failed to
+    reproduce their golden trace exactly.
+    """
+    report = {}
+    failures = 0
+    for name in sorted(SCENARIOS):
+        with open(os.path.join(GOLDEN_DIR, f"{name}.json")) as f:
+            golden = json.load(f)
+        report[name] = {}
+        for engine, res in _engine_results(name).items():
+            diffs = _trace_diff(_serialize(res), golden)
+            report[name][engine] = diffs
+            status = "ok" if diffs["exact"] else "DIFF"
+            if not diffs["exact"]:
+                failures += 1
+            print(f"{name:28s} {engine:16s} {status} "
+                  f"max_task_diff={diffs['task_fields']:.3e}")
+    if out_path:
+        os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+        print(f"wrote {out_path}")
+    return failures
+
+
 if __name__ == "__main__":
     if "--regen" in sys.argv:
         regenerate()
+    elif "--check" in sys.argv:
+        out = None
+        if "--out" in sys.argv:
+            out = sys.argv[sys.argv.index("--out") + 1]
+        sys.exit(1 if check(out_path=out) else 0)
     else:
         print(__doc__)

@@ -1,0 +1,315 @@
+"""Regression tests for the hot-path bugfix sweep.
+
+Three long-standing bugs, each with a test that fails on the pre-fix code:
+
+* **GA mating** (``ga.py``): with an odd ``pop_size``,
+  ``zip(parents[0::2], parents[1::2])`` silently dropped the last shuffled
+  parent from mating every generation.
+* **TensorPool aliasing** (``runtime/tensorpool.py``): double-releasing a
+  buffer enqueued it twice, so two later ``acquire`` calls aliased one
+  backing store; foreign releases created unservable free-list buckets;
+  pooled frees were never counted.
+* **Best Mapping frontier** (``core/baselines.py``): keys whose archive
+  entries got dominated stayed in the hillclimb frontier, burning the
+  evaluation budget expanding dead mappings.
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AnalyzerConfig,
+    GAConfig,
+    GeneticScheduler,
+    SolutionFactory,
+    StaticAnalyzer,
+    build_scenario,
+    chain_graph,
+)
+from repro.core.baselines import _whole_model_solution, best_mapping_solutions
+from repro.core.nsga import fast_non_dominated_sort
+from repro.experiments import generate_scenario_specs
+from repro.experiments.evaluate import default_context
+from repro.runtime.tensorpool import CHUNK, TensorPool
+
+
+# -- GA: odd pop_size mating --------------------------------------------------
+
+def _nets(n=2):
+    return [chain_graph(f"m{i}", [("conv", 2e6, 500, 2000)] * 3)
+            for i in range(n)]
+
+
+def _scheduler(pop_size, **cfg_kw):
+    nets = _nets()
+    fac = SolutionFactory(nets, num_processors=3, rng=random.Random(7))
+
+    def ev(sol):
+        # cheap deterministic objective: genes only, no simulation
+        return (float(sum(map(sum, sol.mapping))), float(sum(sol.dtype)))
+
+    cfg_kw.setdefault("max_generations", 3)
+    cfg_kw.setdefault("min_generations", 1)
+    return GeneticScheduler(
+        factory=fac, evaluate_fast=ev,
+        config=GAConfig(pop_size=pop_size, seed=3, **cfg_kw),
+    ), fac
+
+
+def test_ga_odd_population_mates_every_parent():
+    """The leftover shuffled parent must participate in mating.
+
+    With crossover and mutation disabled, offspring are verbatim parent
+    copies — so every parent's chromosome must appear among the offspring.
+    Pre-fix, an odd population produced only ``pop_size - 1`` offspring and
+    the last shuffled parent's genes were guaranteed absent.
+    """
+    sched, fac = _scheduler(5, cx_prob=0.0, p_bit=0.0, p_map=0.0,
+                            p_prio=0.0, p_cfg=0.0)
+    parents = [fac.random_solution() for _ in range(5)]
+    offspring = sched._mate(parents)
+    assert len(offspring) == 6  # pre-fix: 4
+    child_keys = {c.key() for c in offspring}
+    for p in parents:
+        assert p.key() in child_keys, "a parent sat the generation out"
+
+
+def test_ga_even_population_mating_unchanged():
+    sched, fac = _scheduler(6, cx_prob=0.0, p_bit=0.0, p_map=0.0,
+                            p_prio=0.0, p_cfg=0.0)
+    parents = [fac.random_solution() for _ in range(6)]
+    state = sched.rng.getstate()
+    offspring = sched._mate(parents)
+    assert len(offspring) == 6
+    # even path draws exactly one rng value per pair (the cx_prob gate),
+    # exactly like the pre-fix loop — no extra partner draw, so even-sized
+    # populations reproduce historical GA runs bit for bit
+    replay = random.Random()
+    replay.setstate(state)
+    for _ in range(3):
+        replay.random()
+    assert replay.getstate() == sched.rng.getstate()
+
+
+def test_ga_runs_with_odd_pop_size():
+    """End to end: an odd population searches without losing candidates.
+
+    With local search off and crossover forced, generation 1 evaluates the
+    5 initial candidates, the offspring, and the accurate front-0 re-evals.
+    The mating fix produces 6 offspring per generation where the pre-fix
+    loop produced 4, so the fast-evaluation count before the accurate pass
+    is 11 distinct solutions vs at most 9 — the evaluator-call counter
+    (which also includes the accurate pass) must clear the post-fix floor.
+    """
+    sched, _ = _scheduler(5, cx_prob=1.0, p_local=0.0, max_generations=1,
+                          min_generations=1)
+    fast_calls = []
+    inner = sched.evaluate_fast
+    sched.evaluate_fast = lambda s: (fast_calls.append(s.key()), inner(s))[1]
+    result = sched.run()
+    assert result.generations == 1
+    assert result.pareto
+    # 5 initial + 6 offspring distinct fast evaluations (pre-fix: 5 + 4)
+    assert len(set(fast_calls)) >= 11
+
+
+def test_ga_singleton_population_survives():
+    sched, fac = _scheduler(1, cx_prob=0.0, p_bit=0.0, p_map=0.0,
+                            p_prio=0.0, p_cfg=0.0)
+    parents = [fac.random_solution()]
+    offspring = sched._mate(parents)
+    assert len(offspring) == 2
+    assert all(c.key() == parents[0].key() for c in offspring)
+
+
+# -- TensorPool: double/foreign release ---------------------------------------
+
+def _base(arr):
+    while arr.base is not None:
+        arr = arr.base
+    return arr
+
+
+def test_tensorpool_double_release_does_not_alias():
+    pool = TensorPool()
+    a = pool.acquire((100,), np.float32)
+    pool.release(a)
+    pool.release(a)  # double release: must be ignored
+    x = pool.acquire((100,), np.float32)
+    y = pool.acquire((100,), np.float32)
+    assert _base(x) is not _base(y), (
+        "two live buffers share one backing store")
+    # writes through one view must not corrupt the other
+    x.fill(1.0)
+    y.fill(2.0)
+    assert float(x[0]) == 1.0 and float(y[0]) == 2.0
+    assert pool.stats.rejected_frees == 1
+
+
+def test_tensorpool_foreign_release_ignored():
+    pool = TensorPool()
+    foreign = np.zeros(100, np.uint8)  # not chunk-rounded, never acquired
+    pool.release(foreign)
+    assert pool.stats.rejected_frees == 1
+    # no unservable bucket keyed by the unrounded nbytes
+    assert 100 not in pool._free
+    # and the free list still serves normally afterwards
+    a = pool.acquire((10,), np.float32)
+    pool.release(a)
+    b = pool.acquire((10,), np.float32)
+    assert pool.stats.reuses == 1
+    assert _base(b) is _base(a)
+
+
+def test_tensorpool_counts_pooled_frees():
+    pool = TensorPool()
+    bufs = [pool.acquire((CHUNK // 4,), np.float32) for _ in range(3)]
+    for b in bufs:
+        pool.release(b)
+    # pre-fix: frees stayed 0 on the pooled path, so §5.3 free-time
+    # accounting could not be audited
+    assert pool.stats.frees == 3
+    assert pool.stats.rejected_frees == 0
+    # release calls = honored + rejected, always
+    pool.release(bufs[0])
+    assert pool.stats.frees + pool.stats.rejected_frees == 4
+
+
+def test_tensorpool_disabled_counts_frees():
+    pool = TensorPool(enabled=False)
+    a = pool.acquire((10,), np.float32)
+    pool.release(a)
+    assert pool.stats.frees == 1
+    assert pool.stats.mallocs == 1
+
+
+def test_tensorpool_reuse_roundtrip_still_works():
+    pool = TensorPool()
+    a = pool.acquire((64, 64), np.float32)
+    pool.release(a)
+    b = pool.acquire((32, 32), np.float32)  # smaller, same rounded class?
+    # whatever the bucket, acquire/release cycles keep working and tracked
+    pool.release(b)
+    c = pool.stage(np.ones((8, 8), np.float32))
+    assert float(c[0, 0]) == 1.0
+    pool.release(c)
+    assert pool.stats.frees >= 3
+
+
+# -- Best Mapping: frontier pruning -------------------------------------------
+
+def _prefix_best_mapping(graphs, processors, best_times, evaluate,
+                         max_evals, seed):
+    """Faithful reimplementation of the PRE-fix hillclimb (no pruning, no
+    dedup) — the behavior the committed-seed comparison runs against."""
+    rng = random.Random(seed)
+    n = len(graphs)
+
+    def make(key):
+        cfgs = [(best_times[m][key[m]][1], best_times[m][key[m]][2])
+                for m in range(n)]
+        return _whole_model_solution(graphs, list(key), cfgs)
+
+    start = tuple(min(best_times[m], key=lambda pid: best_times[m][pid][0])
+                  for m in range(n))
+    evaluated = {}
+
+    def ev(key):
+        if key not in evaluated:
+            evaluated[key] = evaluate(make(key))
+        return evaluated[key]
+
+    archive = [(start, ev(start))]
+    frontier = [start]
+    while frontier and len(evaluated) < max_evals:
+        base = frontier.pop(0)
+        neighbors = []
+        for m in range(n):
+            for p in processors:
+                if p != base[m]:
+                    neighbors.append(
+                        tuple(p if i == m else base[i] for i in range(n)))
+        rng.shuffle(neighbors)
+        for cand in neighbors:
+            if len(evaluated) >= max_evals:
+                break
+            if cand in evaluated:
+                continue
+            obj = ev(cand)
+            fits = [o for _, o in archive] + [obj]
+            fronts = fast_non_dominated_sort(fits)
+            if len(archive) in fronts[0]:
+                items = archive + [(cand, obj)]
+                archive = [items[i] for i in fronts[0]]
+                frontier.append(cand)
+    return archive
+
+
+#: Synthetic 3-model × 3-processor landscape. With neighbor-shuffle seed 3
+#: the hillclimb discovers X=(1,0,0) before Y=(0,1,0) while expanding the
+#: start; expanding X then finds (1,1,0), which dominates Y. Pre-fix, the
+#: dead Y stays in the frontier and its private neighborhood
+#: {(0,1,1), (0,1,2)} is evaluated anyway; with pruning it never is.
+_LANDSCAPE = {
+    (0, 0, 0): (10.0, 10.0),
+    (1, 0, 0): (5.0, 10.0),
+    (0, 1, 0): (10.0, 5.0),
+    (1, 1, 0): (6.0, 4.0),
+}
+_DEAD_NEIGHBORHOOD = ((0, 1, 1), (0, 1, 2))
+
+
+def test_best_mapping_prunes_dominated_frontier_keys():
+    graphs = _nets(3)
+    best_times = [{p: (float(m + p + 1), 0, 0) for p in (0, 1, 2)}
+                  for m in range(3)]  # argmin pid 0 -> start = (0, 0, 0)
+    calls = []
+
+    def ev(sol):
+        key = tuple(sol.mapping[m][0] for m in range(3))
+        calls.append(key)
+        return _LANDSCAPE.get(key, (20.0, 20.0))
+
+    sols = best_mapping_solutions(graphs, [0, 1, 2], best_times, ev,
+                                  max_evals=30, seed=3)
+    ix = {k: i for i, k in enumerate(calls)}
+    # precondition of the scenario: X discovered before Y during the start's
+    # expansion (fails loudly if the shuffle stream ever changes)
+    assert ix[(1, 0, 0)] < ix[(0, 1, 0)], "landscape precondition broken"
+    dead = [k for k in _DEAD_NEIGHBORHOOD if k in ix]
+    assert not dead, (
+        f"budget spent expanding a dominated frontier key: {dead}")
+    archive_keys = {tuple(s.mapping[m][0] for m in range(3)) for s in sols}
+    assert archive_keys == {(1, 0, 0), (1, 1, 0)}
+
+
+@pytest.mark.parametrize("index", [1, 2, 4])
+def test_best_mapping_unchanged_or_better_on_committed_seeds(index):
+    """On the committed ``RESULTS_sweep.json`` seeds the pruned hillclimb's
+    archive is unchanged-or-better: no fixed-archive entry is dominated by
+    any pre-fix entry (never worse), while the freed budget lets it
+    dominate pre-fix entries on some scenarios (strictly better)."""
+    ctx = default_context()
+    spec = generate_scenario_specs(8, seed=0)[index]
+    scen = build_scenario(spec.name, [list(g) for g in spec.groups],
+                          ctx.graphs)
+    an = StaticAnalyzer(scen, ctx.processors, ctx.profiler, ctx.comm_model,
+                        AnalyzerConfig(ga=GAConfig(seed=spec.seed)))
+    ev = lambda s: an.objectives(s, num_requests=an.cfg.fast_requests)
+    fixed = [tuple(s.fitness)
+             for s in an.best_mapping(max_evals=120, seed=spec.seed)]
+    pre = [o for _, o in _prefix_best_mapping(
+        scen.graphs, [p.pid for p in an.processors], an.best_times,
+        ev, 120, spec.seed)]
+
+    def dominates(a, b):
+        return (all(x <= y for x, y in zip(a, b))
+                and any(x < y for x, y in zip(a, b)))
+
+    worse = [f for f in fixed if any(dominates(p, f) for p in pre)]
+    assert not worse, "pruning made an archive entry strictly worse"
+    if index == 4:
+        # this scenario's pre-fix run provably wasted budget: the fixed
+        # archive strictly dominates several of its entries
+        assert any(any(dominates(f, p) for f in fixed) for p in pre)
