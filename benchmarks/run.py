@@ -30,6 +30,14 @@ Prints ``name,us_per_call,derived`` CSV rows. Sections:
             under periodic vs jittered vs Poisson traffic, with each
             method's α*, frequency-gain ratios and satisfaction rates per
             process (smoke sizing on the default pass, like sweep).
+* faults  — fault injection + graceful degradation: one deterministic
+            scenario run on the virtual-clock runtime clean, faulted
+            without recovery (raw drops) and faulted with the
+            RecoveryPolicy (timeout/retry + dropout remap), reporting
+            deadline satisfaction and dropped-request counts for each,
+            the remap's recovery latency, and the analyzer-side
+            ``score_under_faults`` robustness objective. Smoke sizing on
+            the default pass, like sweep.
 * roofline — per (arch × shape) roofline terms from the dry-run artifacts
              (EXPERIMENTS.md §Roofline)
 * kernels — Pallas kernel oracle agreement
@@ -655,6 +663,134 @@ def bench_arrivals(args) -> None:
              + ";".join(f"sat_{m}={sat[m]:.2f}" for m in METHODS))
 
 
+def bench_faults(args) -> None:
+    """Fault injection + graceful degradation on the virtual runtime.
+
+    One deterministic 2-group scenario, one solution that places work on
+    processor 2, three virtual-clock runs:
+
+    * ``clean``      — no faults, no recovery (baseline satisfaction)
+    * ``raw``        — a mid-run permanent dropout of processor 2 plus
+                       heavy-tailed stragglers, no recovery: every request
+                       needing the dead processor is dropped
+    * ``recovered``  — same ensemble with the RecoveryPolicy: the dropout
+                       triggers the fallback remap, stragglers hit the
+                       timeout/retry watchdog, and no request is dropped
+
+    Emitted per run: pooled deadline satisfaction (at a feasible α,
+    calibrated so the clean baseline meets its deadlines — otherwise the
+    comparison is degenerate) and the dropped count.
+    ``faults.recovery_latency`` is the remap's drain time — the
+    last finish among requests already in flight at the drop instant,
+    minus the drop instant. The analyzer-side ``score_under_faults`` rows
+    report the same degradation measured by the simulator tiers (the
+    robustness objective the GA sees when a scenario carries faults).
+    """
+    import random as _random
+
+    from repro.core import FaultSpec, SolutionFactory
+    from repro.core.scoring import deadline_satisfaction
+    from repro.runtime import PuzzleRuntime, RecoveryPolicy, RuntimeConfig
+
+    explicit = getattr(args, "full", False) or "faults" in (
+        getattr(args, "section", None), getattr(args, "only", None))
+    nr = 16 if explicit and not getattr(args, "smoke", False) else 8
+
+    an = _analyzer([["face_det", "selfie_seg"], ["yolov8n"]],
+                   name="faults", seed=0)
+    graphs = list(an.scenario.graphs)
+    groups = [list(g) for g in an.scenario.groups]
+    base_periods = list(an.base_periods)
+
+    # a draw that actually uses processor 2, so the dropout bites
+    sol = None
+    for seed in range(64):
+        fac = SolutionFactory(graphs, num_processors=len(an.processors),
+                              rng=_random.Random(seed))
+        cand = fac.random_solution()
+        if any(p.processor == 2
+               for pl in decode_solution(cand, graphs) for p in pl):
+            sol = cand
+            break
+    assert sol is not None, "no draw places work on processor 2"
+    spec = an.solution_spec(sol)
+
+    def run(periods, faults, recovery):
+        rt = PuzzleRuntime(
+            graphs, sol, an.processors,
+            config=RuntimeConfig(virtual=True, faults=faults,
+                                 recovery=recovery),
+            spec=spec,
+        )
+        t0 = time.perf_counter()
+        with rt:
+            states = rt.run_periodic(groups, periods, num_requests=nr)
+        return rt, states, time.perf_counter() - t0
+
+    # arrivals stay at the paper's base periods — congested, so work is
+    # genuinely in flight when the dropout hits. Satisfaction deadlines
+    # are calibrated per group from the clean run (at α=1 this solution
+    # misses every deadline and all three numbers degenerate to 0).
+    _, clean_states, t_clean = run(base_periods, None, None)
+    deadlines = [1.2 * max(st.makespan for st in gl) for gl in clean_states]
+    alpha = round(max(d / p for d, p in zip(deadlines, base_periods)), 2)
+    emit("faults.deadlines", 0.0,
+         ";".join(f"g{g}={d:.4f}s" for g, d in enumerate(deadlines))
+         + f";alpha_equiv={alpha}")
+
+    def sat(states):
+        per_group = [[float("inf") if st.makespan is None else st.makespan
+                      for st in gl] for gl in states]
+        dropped = sum(st.makespan is None for gl in states for st in gl)
+        return deadline_satisfaction(per_group, deadlines), dropped
+
+    sat_clean, drop_clean = sat(clean_states)
+    horizon = max(st.last_finish or 0.0
+                  for gl in clean_states for st in gl)
+    t_drop = round(0.35 * horizon, 6)
+    faults = FaultSpec(dropouts=((2, t_drop, None),),
+                       straggler_prob=0.1, straggler_shape=1.5, seed=2025)
+
+    rt_raw, raw_states, t_raw = run(base_periods, faults, None)
+    sat_raw, drop_raw = sat(raw_states)
+    rt_rec, rec_states, t_rec = run(base_periods, faults, RecoveryPolicy())
+    sat_rec, drop_rec = sat(rec_states)
+
+    emit("faults.clean", t_clean * 1e6,
+         f"satisfaction={sat_clean:.2f};dropped={drop_clean};requests={nr * 3}")
+    emit("faults.raw", t_raw * 1e6,
+         f"satisfaction={sat_raw:.2f};dropped={drop_raw};"
+         f"delta_vs_clean={sat_clean - sat_raw:+.2f}")
+    remaps = [e for e in rt_rec.recovery_events if e.kind == "remap"]
+    retries = [e for e in rt_rec.recovery_events if e.kind == "retry"]
+    emit("faults.recovered", t_rec * 1e6,
+         f"satisfaction={sat_rec:.2f};dropped={drop_rec};"
+         f"delta_vs_clean={sat_clean - sat_rec:+.2f};"
+         f"remaps={len(remaps)};retries={len(retries)}")
+
+    # recovery latency: drain time of the requests in flight at the drop
+    inflight = [st for gl in rec_states for st in gl
+                if st.submitted <= t_drop
+                and (st.last_finish is None or st.last_finish > t_drop)]
+    if inflight and all(st.last_finish is not None for st in inflight):
+        latency = max(st.last_finish for st in inflight) - t_drop
+        emit("faults.recovery_latency", latency * 1e6,
+             f"t_drop={t_drop};inflight={len(inflight)}")
+    else:
+        emit("faults.recovery_latency", 0.0,
+             f"t_drop={t_drop};inflight={len(inflight)};drained=False")
+
+    # analyzer-side robustness objective (simulator tiers, measured path)
+    rep = an.score_under_faults(sol, faults=faults, alpha=alpha,
+                                num_requests=nr)
+    emit("faults.score_under_faults", 0.0,
+         f"sat_clean={rep['satisfaction_clean']:.2f};"
+         f"sat_faulted={rep['satisfaction_faulted']:.2f};"
+         f"dropped_clean={rep['dropped_clean']:.0f};"
+         f"dropped_faulted={rep['dropped_faulted']:.0f};"
+         f"score_delta={rep['score_delta']:.3f}")
+
+
 def bench_roofline(args) -> None:
     """Roofline terms per (arch × shape) from the dry-run artifacts."""
     pat = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun",
@@ -717,6 +853,7 @@ SECTIONS = {
     "conformance": bench_conformance,
     "sweep": bench_sweep,
     "arrivals": bench_arrivals,
+    "faults": bench_faults,
     "roofline": bench_roofline,
     "kernels": bench_kernels,
 }

@@ -33,6 +33,7 @@ from .comm import (
 )
 from .des import Environment, PriorityStore
 from .fastsim import FastSimSpec, FastSimulator, SpecBuilder, build_spec
+from .faults import NO_FAULTS, FaultSpec, FaultStream
 from .ga import GAConfig, GAResult, GeneticScheduler
 from .graph import Edge, Layer, ModelGraph, Subgraph, branching_graph, chain_graph
 from .nsga import crowding_distance, das_dennis, dominates, fast_non_dominated_sort, nsga3_select

@@ -12,6 +12,7 @@ evaluation entry points used by the experiments:
 """
 from __future__ import annotations
 
+import math
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -22,6 +23,7 @@ from .batchsim import BatchLane, batch_objectives, run_batch
 from .chromosome import Solution, SolutionFactory, decode_solution
 from .comm import PiecewiseLinearCommModel
 from .fastsim import FastSimSpec, FastSimulator, SpecBuilder, build_spec
+from .faults import FaultSpec
 from .ga import GAConfig, GAResult, GeneticScheduler
 from .processors import Processor
 from .profiler import Profiler
@@ -30,6 +32,7 @@ from .scoring import (
     ALPHA_GRID,
     SaturationResult,
     bisect_alpha_probes,
+    deadline_satisfaction,
     percentile,
     saturation_multiplier,
     saturation_multiplier_bisect,
@@ -102,6 +105,15 @@ class StaticAnalyzer:
         self.arrival: Optional[ArrivalSpec] = scenario.arrival
         self._arrival_key = (self.arrival.key()
                              if self.arrival is not None else None)
+        # The scenario's fault ensemble (None = clean). Like the arrival
+        # process it is threaded through every simulation path and joined
+        # into the objective memo keys — a scenario with faults makes the
+        # GA search fault-tolerant schedules (the robustness objective).
+        faults = scenario.faults
+        self.faults: Optional[FaultSpec] = (
+            None if faults is None or faults.empty else faults)
+        self._fault_key = (self.faults.key()
+                           if self.faults is not None else None)
         self.factory = SolutionFactory(
             scenario.graphs, num_processors=len(processors),
         )
@@ -121,6 +133,8 @@ class StaticAnalyzer:
         # decode to the same placed configuration share evaluation results.
         self._objective_cache: "OrderedDict[Tuple, Tuple[float, ...]]" = OrderedDict()
         self.objective_cache_hits = 0
+        # invalid/absent samples skipped by the last apply_measured_costs
+        self.measured_skips = 0
         self._batch_pool = None  # lazy ProcessPoolExecutor (batch_workers > 1)
 
     # -- batch plumbing ------------------------------------------------------
@@ -155,6 +169,7 @@ class StaticAnalyzer:
             dispatch_overhead=self.cfg.dispatch_overhead if measured else 0.0,
             dispatch_pid=self.cfg.dispatch_pid,
             arrivals=self.arrival,
+            faults=self.faults,
         )
 
     # -- simulation ------------------------------------------------------------
@@ -182,13 +197,17 @@ class StaticAnalyzer:
         seed: int = 0,
         engine: Optional[str] = None,
         collect_tasks: bool = True,
+        faults: Optional[FaultSpec] = None,
     ) -> SimResult:
+        """Simulate ``solution``; ``faults=None`` injects the scenario's own
+        ensemble (pass an empty :class:`FaultSpec` to force a clean run)."""
         engine = engine or self.cfg.engine
         periods = [alpha * p for p in self.base_periods]
         noise = None
         if measured:
             noise = NoiseModel(self.cfg.noise.sigma_by_kind, seed=seed)
         dispatch_overhead = self.cfg.dispatch_overhead if measured else 0.0
+        faults = faults if faults is not None else self.faults
         if engine == "fast":
             sim = FastSimulator(
                 self.solution_spec(solution),
@@ -199,6 +218,7 @@ class StaticAnalyzer:
                 dispatch_overhead=dispatch_overhead,
                 dispatch_pid=self.cfg.dispatch_pid,
                 arrivals=self.arrival,
+                faults=faults,
             )
             return sim.run(collect_tasks=collect_tasks)
         placed = decode_solution(solution, self.scenario.graphs)
@@ -215,6 +235,7 @@ class StaticAnalyzer:
             dispatch_overhead=dispatch_overhead,
             dispatch_pid=self.cfg.dispatch_pid,
             arrivals=self.arrival,
+            faults=faults,
         )
         return ref.run()
 
@@ -231,11 +252,13 @@ class StaticAnalyzer:
         engine = engine or self.cfg.engine
         key = None
         if engine == "fast":
-            # the arrival key is constant per analyzer today, but it MUST
-            # be part of the memo key: a cache shared or persisted across
-            # arrival processes would otherwise serve wrong results
+            # the arrival/fault keys are constant per analyzer today, but
+            # they MUST be part of the memo key: a cache shared or persisted
+            # across arrival processes or fault ensembles would otherwise
+            # serve one configuration's results for the other
             key = (self.solution_spec(solution).signature(), alpha,
-                   num_requests, measured, self._arrival_key)
+                   num_requests, measured, self._arrival_key,
+                   self._fault_key)
             hit = self._objective_cache.get(key)
             if hit is not None:
                 self.objective_cache_hits += 1
@@ -280,7 +303,7 @@ class StaticAnalyzer:
         num_requests = num_requests or self.cfg.fast_requests
         keys = [
             (self.solution_spec(s).signature(), alpha, num_requests, measured,
-             self._arrival_key)
+             self._arrival_key, self._fault_key)
             for s in solutions
         ]
         lane_of_key: Dict[Tuple, int] = {}
@@ -393,7 +416,7 @@ class StaticAnalyzer:
         keys: List[Tuple] = []
         for sol, alpha in requests:
             key = (self.solution_spec(sol).signature(), alpha,
-                   self._arrival_key)
+                   self._arrival_key, self._fault_key)
             keys.append(key)
             if key not in lane_of_key:
                 lane_of_key[key] = len(lanes)
@@ -512,6 +535,7 @@ class StaticAnalyzer:
                                    if measured else 0.0),
                 dispatch_pid=self.cfg.dispatch_pid,
                 arrivals=self.arrival,
+                faults=self.faults,
             )
             return build_report("virtual", rt_res, sim, rel_tol=0.0)
         if mode != "real":
@@ -572,19 +596,115 @@ class StaticAnalyzer:
         spec/objective caches are flushed — they key on solution
         identity/spec content, either of which may now map to different
         costs.
+
+        A partial measurement set is fine: keys carrying no usable sample
+        (``None``, non-finite or non-positive — a worker that died or a
+        request dropped by an injected fault leaves such holes) are skipped
+        rather than poisoning the ProfileDB; the count of skips is exposed
+        as ``self.measured_skips`` for conformance reports.
         """
         changed: List[str] = []
+        skipped = 0
         for key, t in measurements.items():
+            if t is None or not math.isfinite(t) or t <= 0.0:
+                skipped += 1
+                continue
             old = self.profiler.db.get(key)
             if old is not None and old > 0 and abs(t - old) <= rel_tol * old:
                 continue
             if self.profiler.db.update(key, t):
                 changed.append(key)
+        self.measured_skips = skipped
         if changed:
             self._spec_builder.invalidate(changed)
             self._spec_cache.clear()
             self._objective_cache.clear()
         return len(changed)
+
+    # -- robustness -----------------------------------------------------------
+    def score_under_faults(
+        self,
+        solution: Solution,
+        faults: Optional[FaultSpec] = None,
+        alpha: float = 1.0,
+        num_requests: Optional[int] = None,
+        measured: bool = True,
+        seed: int = 0,
+    ) -> Dict[str, float]:
+        """Degradation report: clean vs faulted evaluation of ``solution``.
+
+        Runs the same simulation twice — once clean, once under ``faults``
+        (the scenario's own ensemble by default) — and reports deadline
+        satisfaction, XRBench score and dropped-request counts for both,
+        plus the deltas. This is the robustness objective surfaced to
+        experiments and benchmarks; the GA optimizes it implicitly when the
+        scenario carries a fault ensemble (every objective evaluation is
+        then faulted).
+        """
+        from .faults import NO_FAULTS
+
+        faults = faults if faults is not None else self.faults
+        if faults is None:
+            faults = NO_FAULTS
+        num_requests = num_requests or self.cfg.accurate_requests
+        deadlines = [alpha * p for p in self.base_periods]
+        out: Dict[str, float] = {}
+        for tag, spec in (("clean", NO_FAULTS), ("faulted", faults)):
+            res = self.simulate(
+                solution, alpha, num_requests, measured=measured, seed=seed,
+                collect_tasks=False, faults=spec,
+            )
+            per_group: List[List[float]] = [
+                [] for _ in range(self.scenario.num_groups)]
+            dropped = 0
+            for r in res.requests:
+                per_group[r.group].append(r.makespan)
+                if r.makespan == float("inf"):
+                    dropped += 1
+            out[f"satisfaction_{tag}"] = deadline_satisfaction(
+                per_group, deadlines)
+            out[f"score_{tag}"] = scenario_score(per_group, deadlines)
+            out[f"dropped_{tag}"] = float(dropped)
+        out["satisfaction_delta"] = (
+            out["satisfaction_clean"] - out["satisfaction_faulted"])
+        out["score_delta"] = out["score_clean"] - out["score_faulted"]
+        return out
+
+    def backup_mapping(
+        self,
+        solution: Solution,
+        dead_pid: int,
+    ) -> Tuple[Solution, Dict[Tuple[int, int], int]]:
+        """Next-best placement excluding ``dead_pid``: the fallback remap.
+
+        Keeps the solution's partition/priority/config and moves every
+        subgraph placed on ``dead_pid`` to its *fastest surviving* processor
+        (profiler exec time; ties break on pid — deterministic). Returns the
+        backup solution plus the ``(net, k) -> new_pid`` remap the runtime
+        applies at a permanent dropout (``PuzzleRuntime.set_backup``); the
+        backup's :meth:`solution_spec` provides the post-remap cost arrays.
+        """
+        from dataclasses import replace as _replace
+
+        survivors = [p for p in self.processors if p.pid != dead_pid]
+        if not survivors:
+            raise ValueError("no surviving processors for a backup mapping")
+        placed = decode_solution(solution, self.scenario.graphs)
+        backup = solution.copy()
+        remap: Dict[Tuple[int, int], int] = {}
+        for net, plist in enumerate(placed):
+            for k, p in enumerate(plist):
+                if p.processor != dead_pid:
+                    continue
+                best = min(
+                    survivors,
+                    key=lambda pr: (self.profiler.subgraph_time(
+                        _replace(p, processor=pr.pid)), pr.pid),
+                )
+                remap[(net, k)] = best.pid
+                for lid in p.subgraph.layer_ids:
+                    backup.mapping[net][lid] = best.pid
+        return backup, remap
 
     def rerank_pareto(
         self,

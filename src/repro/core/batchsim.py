@@ -58,6 +58,7 @@ import numpy as np
 
 from .arrivals import ArrivalSpec, arrival_horizon, draw_arrivals
 from .fastsim import FastSimSpec
+from .faults import FaultSpec, FaultStream
 from .processors import Processor
 from .simulator import NoiseModel, RequestRecord, SimResult, TaskRecord
 
@@ -89,6 +90,7 @@ class BatchLane:
     dispatch_pid: int = 0
     overlap_comm: bool = False
     arrivals: Optional[ArrivalSpec] = None
+    faults: Optional[FaultSpec] = None
 
 
 @dataclass
@@ -309,6 +311,20 @@ class BatchSimulator:
             bound = lanes[b].num_requests * sum(
                 lanes[b].spec.counts[n] for nets in self.groups for n in nets)
             ztab[b, :bound] = [rng.gauss(0.0, 1.0) for _ in range(bound)]
+
+        # Per-lane fault streams, sampled scalar-side at delivery. The
+        # lock-step drain visits each lane's deliveries in ring (= push
+        # sequence) order — the same per-lane delivery order the scalar
+        # engines walk, and the property the noise cursors already rely
+        # on — so a live random.Random stream stays aligned; faulted
+        # elements recompute exec/total with the scalar float expressions
+        # for bit parity.
+        fstreams: List[Optional[FaultStream]] = [None] * W
+        for b, ln in enumerate(lanes):
+            if ln.faults is not None and not ln.faults.empty:
+                fstreams[b] = FaultStream(ln.faults)
+        faulted = np.array([fs is not None for fs in fstreams], bool)
+        any_fault = bool(faulted.any())
 
         # event frontier: per-lane candidate (time, seq) columns — one per
         # request source, one per worker completion, one for the head of the
@@ -627,6 +643,26 @@ class BatchSimulator:
                                     overlap[nb], 0.0, comm_v[nb, gr[draw]])
                                 tt[draw] = et + quant_v[nb, gr[draw]] + cmv
                                 total = tt
+                        if any_fault:
+                            fmask = faulted[rb]
+                            if fmask.any():
+                                exec_t = exec_t.copy()
+                                total = total.copy()
+                                for i in np.nonzero(fmask)[0]:
+                                    b = int(rb[i])
+                                    et, stall = fstreams[b].service(
+                                        int(pidr[i]), float(tr[i]),
+                                        float(exec_t[i]))
+                                    # scalar float order of the per-solution
+                                    # loop: exec + quant + (0 | comm), then
+                                    # stall + total
+                                    cmv = (0.0 if overlap[b]
+                                           else float(comm_v[b, gr[i]]))
+                                    tt = et + float(quant_v[b, gr[i]]) + cmv
+                                    if stall > 0.0:
+                                        tt = stall + tt
+                                    exec_t[i] = et
+                                    total[i] = tt
                         if collect_tasks:
                             for i, b in enumerate(rb):
                                 ri = del_rec[b, j]
@@ -639,7 +675,14 @@ class BatchSimulator:
                                 end_rec[b, pidr[i]] = ri
                         first_start[rb, rrr] = np.minimum(
                             first_start[rb, rrr], tr)
-                        busy[rb, pidr] += total
+                        if any_fault:
+                            # permanent-dropout stalls are infinite: the
+                            # worker's completion never fires (identical to
+                            # the scalar engines) and busy must not go inf
+                            fin = np.isfinite(total)
+                            busy[rb[fin], pidr[fin]] += total[fin]
+                        else:
+                            busy[rb, pidr] += total
                         times[rb, G + pidr] = tr + total
                         seqs[rb, G + pidr] = seq[rb]
                         seq[rb] += 1

@@ -35,6 +35,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from .arrivals import ArrivalSpec, arrival_horizon, draw_arrivals
 from .chromosome import BACKENDS, DTYPES, PlacedSubgraph, subgraph_processor
 from .comm import PiecewiseLinearCommModel
+from .faults import FaultSpec, FaultStream
 from .processors import Processor
 from .profiler import Profiler
 from .simulator import (
@@ -433,6 +434,7 @@ class FastSimulator:
         dispatch_overhead: float = 0.0,
         dispatch_pid: int = 0,
         arrivals: Optional[ArrivalSpec] = None,
+        faults: Optional[FaultSpec] = None,
     ):
         self.spec = spec
         self.groups = groups
@@ -444,6 +446,8 @@ class FastSimulator:
         self.dispatch_pid = dispatch_pid
         # request-source arrival process; None = periodic (arrival = rid·Φ)
         self.arrivals = arrivals
+        # fault ensemble; empty specs normalize to None (clean path intact)
+        self.faults = None if faults is None or faults.empty else faults
 
     @classmethod
     def from_placed(
@@ -461,6 +465,7 @@ class FastSimulator:
         dispatch_overhead: float = 0.0,
         dispatch_pid: int = 0,
         arrivals: Optional[ArrivalSpec] = None,
+        faults: Optional[FaultSpec] = None,
     ) -> "FastSimulator":
         """Build spec + simulator with :class:`RuntimeSimulator`'s signature."""
         spec = build_spec(placed, processors, profiler, comm_model, input_home_pid)
@@ -468,13 +473,14 @@ class FastSimulator:
             spec, groups, periods, num_requests=num_requests,
             overlap_comm=overlap_comm, noise=noise,
             dispatch_overhead=dispatch_overhead, dispatch_pid=dispatch_pid,
-            arrivals=arrivals,
+            arrivals=arrivals, faults=faults,
         )
 
     def run(self, collect_tasks: bool = True) -> SimResult:
-        if not collect_tasks and self.noise is None and self.dispatch_overhead <= 0:
+        if (not collect_tasks and self.noise is None
+                and self.dispatch_overhead <= 0 and self.faults is None):
             # GA fast-evaluation configuration: no task records, no noise
-            # draws, no dispatch injection — take the lean loop.
+            # draws, no dispatch injection, no faults — take the lean loop.
             return self._run_lean()
         return self._run_full(collect_tasks)
 
@@ -613,6 +619,8 @@ class FastSimulator:
         noise = self.noise
         rng_gauss = random.Random(noise.seed if noise else 0).gauss
         exp = math.exp
+        fault_service = (FaultStream(self.faults).service
+                         if self.faults else None)
 
         # dense per-pid arrays (pids are small non-negative ints)
         pids = [p.pid for p in spec.processors]
@@ -698,6 +706,9 @@ class FastSimulator:
                 if sigma > 0.0:
                     # mean-1 lognormal fluctuation (§6.3 run-to-run variance)
                     exec_t *= exp(rng_gauss(-0.5 * sigma * sigma, sigma))
+                stall = 0.0
+                if fault_service is not None:
+                    exec_t, stall = fault_service(pid, now, exec_t)
                 quant = quant_v[g]
                 cm = comm_v[g]
                 if rec is not None:
@@ -706,7 +717,12 @@ class FastSimulator:
                 if now < rr.first_start:
                     rr.first_start = now
                 total = exec_t + quant + (0.0 if overlap else cm)
-                busy_v[pid] += total
+                if stall > 0.0:
+                    # dropped processor: the task waits out the repair (the
+                    # END at t=inf never pops when permanent)
+                    total = stall + total
+                if not math.isinf(total):
+                    busy_v[pid] += total
                 push(events, (now + total, seq, _END, pid, item))
                 seq += 1
             elif code == _END:

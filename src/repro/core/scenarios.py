@@ -21,6 +21,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from .arrivals import ArrivalSpec
 from .chromosome import BACKENDS, DTYPES, PlacedSubgraph, Solution
+from .faults import FaultSpec
 from .graph import ModelGraph
 from .processors import Processor
 from .profiler import Profiler
@@ -38,12 +39,19 @@ class Scenario:
     stack (``StaticAnalyzer``, the batched engine, the virtual-clock
     runtime) reads it from here, so one scenario object fully describes
     the workload.
+
+    ``faults`` injects a deterministic fault ensemble (processor dropouts,
+    throttle windows, stragglers — :class:`~repro.core.faults.FaultSpec`)
+    into every simulation of the scenario; ``None`` = clean. A scenario
+    with faults makes the GA optimize under the ensemble — the robustness
+    objective — since the analyzer threads it through all evaluation paths.
     """
 
     name: str
     graphs: Tuple[ModelGraph, ...]
     groups: Tuple[Tuple[int, ...], ...]   # per group: indices into graphs
     arrival: Optional[ArrivalSpec] = None
+    faults: Optional[FaultSpec] = None
 
     @property
     def num_groups(self) -> int:
@@ -173,14 +181,15 @@ def build_scenario(
     group_model_names: Sequence[Sequence[str]],
     graph_factory: Dict[str, ModelGraph],
     arrival: Optional[ArrivalSpec] = None,
+    faults: Optional[FaultSpec] = None,
 ) -> Scenario:
     """Materialize a scenario from model names; duplicates get unique graphs.
 
     ``group_model_names`` is a sequence of per-group name sequences (the
     shape produced by :func:`sample_groups` / :func:`random_scenarios`).
     ``arrival`` selects the scenario's request arrival process (``None`` =
-    periodic). Deterministic: graph indices are assigned in iteration
-    order.
+    periodic); ``faults`` its injected fault ensemble (``None`` = clean).
+    Deterministic: graph indices are assigned in iteration order.
     """
     graphs: List[ModelGraph] = []
     groups: List[Tuple[int, ...]] = []
@@ -191,4 +200,4 @@ def build_scenario(
             graphs.append(graph_factory[n])
         groups.append(tuple(ids))
     return Scenario(name=name, graphs=tuple(graphs), groups=tuple(groups),
-                    arrival=arrival)
+                    arrival=arrival, faults=faults)

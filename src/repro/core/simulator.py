@@ -21,6 +21,7 @@ from .arrivals import ArrivalSpec, arrival_horizon, draw_arrivals
 from .chromosome import PlacedSubgraph
 from .comm import PiecewiseLinearCommModel, quantization_cost
 from .des import Environment, PriorityStore
+from .faults import FaultSpec, FaultStream
 from .processors import Processor
 from .profiler import Profiler
 
@@ -201,6 +202,7 @@ class RuntimeSimulator:
         dispatch_overhead: float = 0.0,
         dispatch_pid: int = 0,
         arrivals: Optional[ArrivalSpec] = None,
+        faults: Optional[FaultSpec] = None,
     ):
         self.placed = placed
         self.processors = processors
@@ -214,6 +216,9 @@ class RuntimeSimulator:
         self.noise = noise
         # request-source arrival process; None = periodic (arrival = rid·Φ)
         self.arrivals = arrivals
+        # fault ensemble; an empty spec normalizes to None so the clean
+        # path stays byte-for-byte what it was before the fault layer
+        self.faults = None if faults is None or faults.empty else faults
         self._noise_rng = random.Random(noise.seed if noise else 0)
         # The Coordinator runs on the CPU (paper §6.3: dispatch/system work
         # makes the CPU a contended, fluctuating resource). Every task
@@ -278,6 +283,8 @@ class RuntimeSimulator:
                 if pending[pk] == 0:
                     release(gid, rid, net, s)
 
+        fault_stream = FaultStream(self.faults) if self.faults else None
+
         def worker(proc: Processor):
             store = stores[proc.pid]
             sigma = self.noise.sigma(proc.kind) if self.noise else 0.0
@@ -294,12 +301,22 @@ class RuntimeSimulator:
                     exec_t *= math.exp(
                         self._noise_rng.gauss(-0.5 * sigma * sigma, sigma)
                     )
+                stall = 0.0
+                if fault_stream is not None:
+                    exec_t, stall = fault_stream.service(
+                        proc.pid, env.now, exec_t)
                 rec.comm_time, rec.quant_time, rec.exec_time = comm, quant, exec_t
                 rec.started = env.now
                 rr = req_records[(gid, rid)]
                 rr.first_start = min(rr.first_start, env.now)
                 total = exec_t + quant + (0.0 if self.overlap_comm else comm)
-                busy[proc.pid] += total
+                if stall > 0.0:
+                    # delivered to a dropped processor: wait out the repair
+                    # (forever when permanent — the END event at t=inf never
+                    # fires, so the request is dropped at the horizon)
+                    total = stall + total
+                if not math.isinf(total):
+                    busy[proc.pid] += total
                 yield env.timeout(total)
                 rec.finished = env.now
                 task_done(gid, rid, net, k)

@@ -26,6 +26,7 @@ from .evaluate import (
 from .specs import (
     ScenarioSpec,
     arrival_stream_seed,
+    fault_stream_seed,
     generate_scenario_specs,
     scenario_stream_seed,
 )
@@ -40,6 +41,7 @@ __all__ = [
     "arrival_stream_seed",
     "default_context",
     "evaluate_scenario",
+    "fault_stream_seed",
     "format_summary",
     "generate_scenario_specs",
     "geometric_mean",

@@ -247,8 +247,12 @@ def evaluate_scenario(
     context = context or default_context()
     t0 = time.perf_counter()
 
+    # a spec carrying faults threads its ensemble into every evaluation
+    # path below (GA, α*-search, satisfaction) via the analyzer — the
+    # robustness objective: the GA optimizes under the faulted simulator
     scenario = build_scenario(spec.name, [list(g) for g in spec.groups],
-                              context.graphs, arrival=spec.arrival)
+                              context.graphs, arrival=spec.arrival,
+                              faults=spec.faults)
     analyzer = StaticAnalyzer(
         scenario, context.processors, context.profiler, context.comm_model,
         AnalyzerConfig(

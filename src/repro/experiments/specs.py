@@ -23,6 +23,7 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from ..core.arrivals import ArrivalSpec
+from ..core.faults import FaultSpec
 from ..core.scenarios import sample_groups
 from ..zoo import MODEL_NAMES
 
@@ -53,6 +54,19 @@ def arrival_stream_seed(sweep_seed: int, index: int) -> int:
     return int.from_bytes(digest[:8], "big") >> 1
 
 
+def fault_stream_seed(sweep_seed: int, index: int) -> int:
+    """Deterministic 63-bit per-scenario *fault* seed.
+
+    Third derivation domain beside :func:`scenario_stream_seed` and
+    :func:`arrival_stream_seed`: the straggler draws of scenario *i*'s
+    fault ensemble are independent of its composition and arrival streams,
+    and stable across processes and ``PYTHONHASHSEED``.
+    """
+    digest = hashlib.sha256(
+        f"puzzle-fault/{sweep_seed}/{index}".encode()).digest()
+    return int.from_bytes(digest[:8], "big") >> 1
+
+
 @dataclass(frozen=True)
 class ScenarioSpec:
     """One randomized scenario: identity, composition, RNG stream, arrivals.
@@ -65,7 +79,11 @@ class ScenarioSpec:
     omission so pre-arrival-axis run dirs still load); non-periodic specs
     carry their own SHA-256-derived arrival seed
     (:func:`arrival_stream_seed`), keeping results worker-count-invariant
-    and resumable exactly like the composition stream.
+    and resumable exactly like the composition stream. ``faults`` is the
+    scenario's injected fault ensemble (``None`` = clean, serialized by
+    omission); its straggler stream seed is the SHA-256-derived
+    :func:`fault_stream_seed`, so the faulted sweep keeps the same
+    determinism contract as the clean one.
     """
 
     index: int
@@ -73,6 +91,7 @@ class ScenarioSpec:
     seed: int
     groups: Tuple[Tuple[str, ...], ...]
     arrival: Optional[ArrivalSpec] = None
+    faults: Optional[FaultSpec] = None
 
     @property
     def num_models(self) -> int:
@@ -88,6 +107,8 @@ class ScenarioSpec:
         }
         if self.arrival is not None:
             doc["arrival"] = self.arrival.to_json()
+        if self.faults is not None:
+            doc["faults"] = self.faults.to_json()
         return doc
 
     @classmethod
@@ -99,6 +120,8 @@ class ScenarioSpec:
             groups=tuple(tuple(g) for g in d["groups"]),
             arrival=(ArrivalSpec.from_json(d["arrival"])
                      if d.get("arrival") is not None else None),
+            faults=(FaultSpec.from_json(d["faults"])
+                    if d.get("faults") is not None else None),
         )
 
 
@@ -113,6 +136,11 @@ def generate_scenario_specs(
     arrival: Optional[str] = None,
     arrival_jitter: float = 0.25,
     arrival_distribution: str = "uniform",
+    faults: Optional[str] = None,
+    fault_straggler_prob: float = 0.1,
+    fault_straggler_shape: float = 1.5,
+    fault_dropout: Optional[Tuple[int, float, Optional[float]]] = (2, 0.02, 0.05),
+    fault_throttle: Optional[Tuple[int, float, float, float]] = (0, 0.01, 0.03, 2.0),
 ) -> List[ScenarioSpec]:
     """Generate ``count`` randomized scenario specs per the §6.1 recipe.
 
@@ -130,6 +158,18 @@ def generate_scenario_specs(
     identical to the periodic sweep at the same ``seed``, only the traffic
     changes. ``arrival_jitter``/``arrival_distribution`` parameterize the
     jittered process.
+
+    ``faults`` opens the fault axis the same way: ``None``/"none" keeps
+    clean scenarios (byte-identical spec JSON), "stragglers" attaches a
+    heavy-tailed straggler-only :class:`FaultSpec`, and "mixed" adds the
+    ``fault_dropout`` window (``(pid, t0, t1)`` seconds; ``t1=None`` =
+    permanent) and ``fault_throttle`` window (``(pid, t0, t1, factor)``) on
+    top. Window times are absolute seconds shared across scenarios —
+    deliberate, so the ensemble is identical per scenario and differences
+    in damage reflect the *schedule*; only the straggler draws vary, via
+    the per-scenario :func:`fault_stream_seed`. A scenario spec carrying
+    faults makes the whole evaluation pipeline (GA search, α*-search,
+    satisfaction) run under that ensemble — the robustness objective.
     """
     specs: List[ScenarioSpec] = []
     for i in range(count):
@@ -147,8 +187,26 @@ def generate_scenario_specs(
                 distribution=arrival_distribution,
                 seed=arrival_stream_seed(seed, i),
             )
+        fault_spec = None
+        if faults is not None and faults != "none":
+            if faults not in ("stragglers", "mixed"):
+                raise ValueError(f"unknown fault mode {faults!r} "
+                                 f"(expected none/stragglers/mixed)")
+            dropouts = ()
+            throttles = ()
+            if faults == "mixed":
+                if fault_dropout is not None:
+                    dropouts = (tuple(fault_dropout),)
+                if fault_throttle is not None:
+                    throttles = (tuple(fault_throttle),)
+            fault_spec = FaultSpec(
+                dropouts=dropouts, throttles=throttles,
+                straggler_prob=fault_straggler_prob,
+                straggler_shape=fault_straggler_shape,
+                seed=fault_stream_seed(seed, i),
+            )
         specs.append(ScenarioSpec(
             index=i, name=f"sweep_s{seed}_{i:03d}", seed=stream,
-            groups=tuple(groups), arrival=arrival_spec,
+            groups=tuple(groups), arrival=arrival_spec, faults=fault_spec,
         ))
     return specs

@@ -26,7 +26,10 @@ CLI::
 ``--arrival {periodic,jittered,poisson}`` opens the arrival axis: the same
 scenario compositions evaluated under bursty traffic instead of the
 paper's periodic sources (per-scenario SHA-256 arrival seeds keep the
-determinism contract). See ``--help`` for GA sizing and scenario-shape
+determinism contract). ``--faults {none,stragglers,mixed}`` opens the
+fault axis the same way: every evaluation stage (GA, α*-search,
+satisfaction) runs under the scenario's injected fault ensemble — the
+robustness objective. See ``--help`` for GA sizing and scenario-shape
 knobs. Typical cost on a
 laptop-class CPU: a handful of seconds per scenario (GA pop 20 × ≤30
 generations plus three bisection α*-searches).
@@ -242,6 +245,25 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--arrival-distribution", default="uniform",
                     choices=["uniform", "lognormal"],
                     help="jitter distribution (default uniform)")
+    ap.add_argument("--faults", default="none",
+                    choices=["none", "stragglers", "mixed"],
+                    help="injected fault ensemble per scenario (default "
+                         "none): 'stragglers' = heavy-tailed per-task "
+                         "inflation only, 'mixed' adds the dropout and "
+                         "throttle windows; straggler draws use per-"
+                         "scenario SHA-256 fault seeds, so results stay "
+                         "worker-count-invariant")
+    ap.add_argument("--fault-straggler-prob", type=float, default=0.1,
+                    help="per-task straggler probability (default 0.1)")
+    ap.add_argument("--fault-straggler-shape", type=float, default=1.5,
+                    help="Pareto tail shape; smaller = heavier (default 1.5)")
+    ap.add_argument("--fault-dropout", default="2:0.02:0.05",
+                    help="mixed mode dropout window PID:T0[:T1] in seconds "
+                         "(omit T1 for a permanent dropout; default "
+                         "2:0.02:0.05); 'none' disables it")
+    ap.add_argument("--fault-throttle", default="0:0.01:0.03:2.0",
+                    help="mixed mode throttle window PID:T0:T1:FACTOR "
+                         "(default 0:0.01:0.03:2.0); 'none' disables it")
     ap.add_argument("--pop-size", type=int, default=20, help="GA population")
     ap.add_argument("--max-generations", type=int, default=30)
     ap.add_argument("--min-generations", type=int, default=10)
@@ -261,12 +283,33 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     if args.scenarios < 1:
         ap.error("--scenarios must be >= 1")
 
+    def parse_window(text: str, parts: int, what: str):
+        if text == "none":
+            return None
+        try:
+            fields = text.split(":")
+            if not (parts <= len(fields) <= parts + (1 if what == "dropout"
+                                                     else 0)):
+                raise ValueError(text)
+            pid = int(fields[0])
+            times = [float(x) for x in fields[1:]]
+        except ValueError:
+            ap.error(f"--fault-{what}: cannot parse {text!r}")
+        if what == "dropout":
+            return (pid, times[0], times[1] if len(times) > 1 else None)
+        return (pid, times[0], times[1], times[2])
+
     specs = generate_scenario_specs(
         args.scenarios, seed=args.seed,
         min_groups=args.min_groups, max_groups=args.max_groups,
         min_models=args.min_models, max_models=args.max_models,
         arrival=args.arrival, arrival_jitter=args.arrival_jitter,
         arrival_distribution=args.arrival_distribution,
+        faults=args.faults,
+        fault_straggler_prob=args.fault_straggler_prob,
+        fault_straggler_shape=args.fault_straggler_shape,
+        fault_dropout=parse_window(args.fault_dropout, 2, "dropout"),
+        fault_throttle=parse_window(args.fault_throttle, 4, "throttle"),
     )
     config = SweepConfig(
         pop_size=args.pop_size,
@@ -279,7 +322,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     )
     run_dir = args.run_dir or (
         f"results/sweep_s{args.seed}_n{args.scenarios}"
-        + ("" if args.arrival == "periodic" else f"_a{args.arrival}"))
+        + ("" if args.arrival == "periodic" else f"_a{args.arrival}")
+        + ("" if args.faults == "none" else f"_f{args.faults}"))
 
     t0 = time.perf_counter()
     doc = run_sweep(specs, config, run_dir=run_dir, workers=args.workers,
@@ -291,6 +335,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         "group_bounds": [args.min_groups, args.max_groups],
         "models_per_group_bounds": [args.min_models, args.max_models],
         "arrival": args.arrival,
+        "faults": args.faults,
         "wall_s": time.perf_counter() - t0,
     }
     _write_json(args.out, doc)

@@ -10,8 +10,9 @@ from .conformance import (
 )
 from .coordinator import Coordinator, RequestState
 from .engine import ENGINE_REGISTRY, EagerEngine, Engine, FastMathJitEngine, JitEngine, make_engine
+from .recovery import RecoveryEvent, RecoveryPolicy, greedy_remap
 from .runtime import PuzzleRuntime, RuntimeConfig
 from .tensorpool import CHUNK, SharedBufferTransport, TensorPool
-from .worker import DISPATCH_TOKEN, Worker
+from .worker import DISPATCH_TOKEN, Worker, WorkerExecutionError
 
 __all__ = [k for k in dir() if not k.startswith("_")]

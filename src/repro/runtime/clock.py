@@ -29,6 +29,7 @@ import time
 from typing import Callable, List, Optional, Sequence, Tuple
 
 from ..core.fastsim import FastSimSpec
+from ..core.faults import FaultSpec, FaultStream
 from ..core.processors import Processor
 from ..core.simulator import NoiseModel
 
@@ -95,10 +96,16 @@ class SimCostSource:
         processors: Sequence[Processor],
         noise: Optional[NoiseModel] = None,
         dispatch_overhead: float = 0.0,
+        faults: Optional[FaultSpec] = None,
     ):
         self.spec = spec
         self.dispatch_overhead = dispatch_overhead
         self.noise = noise
+        # fault ensemble realized at delivery time (empty → clean path);
+        # one shared stream across all workers, same as the noise stream
+        self.faults = None if faults is None or faults.empty else faults
+        self.fault_stream = (FaultStream(self.faults)
+                             if self.faults is not None else None)
         # same construction as the simulators: seed 0 when no noise, and one
         # shared stream across all workers consumed in delivery order
         self._rng_gauss = random.Random(noise.seed if noise else 0).gauss
@@ -106,9 +113,17 @@ class SimCostSource:
         self._sigma_of = [0.0] * n_pid
         for p in processors:
             self._sigma_of[p.pid] = noise.sigma(p.kind) if noise else 0.0
+        # per-flat-subgraph cost overrides, installed by the runtime's
+        # dropout recovery: a backup solution shares the partition, so its
+        # FastSimSpec rows index identically and can replace the primary's
+        # costs for exactly the remapped subgraphs
+        self.override: dict = {}
 
     def costs(self, net: int, k: int) -> Tuple[float, float, float]:
         g = self.spec.offsets[net] + k
+        ov = self.override.get(g)
+        if ov is not None:
+            return ov
         return self.spec.comm[g], self.spec.quant[g], self.spec.exec_[g]
 
     def noisy_exec(self, pid: int, exec_t: float) -> float:

@@ -28,6 +28,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from ..core.arrivals import ArrivalSpec
 from ..core.chromosome import Solution
 from ..core.fastsim import FastSimSpec
+from ..core.faults import FaultSpec
 from ..core.graph import ModelGraph
 from ..core.processors import Processor
 from ..core.simulator import NoiseModel, RequestRecord, SimResult, TaskRecord
@@ -125,19 +126,23 @@ def run_virtual_schedule(
     dispatch_overhead: float = 0.0,
     dispatch_pid: int = 0,
     arrivals: Optional[ArrivalSpec] = None,
+    faults: Optional[FaultSpec] = None,
 ) -> SimResult:
     """Execute a schedule on the virtual-clock runtime; return its trace.
 
     This is the fourth engine tier: the *actual* Coordinator/Worker
     dispatch code, replaying the spec's costs deterministically. The result
     is bit-comparable to ``FastSimulator(spec, ...).run(collect_tasks=True)``
-    with the same parameters (including the ``arrivals`` process).
+    with the same parameters (including the ``arrivals`` process and the
+    ``faults`` ensemble — injected raw, with no recovery policy, which is
+    the parity-oracle setting).
     """
     rt = PuzzleRuntime(
         graphs, solution, processors,
         config=RuntimeConfig(
             virtual=True, noise=noise,
             dispatch_overhead=dispatch_overhead, dispatch_pid=dispatch_pid,
+            faults=faults,
         ),
         spec=spec,
     )

@@ -131,6 +131,28 @@ class Coordinator:
                     self._dispatch(st, n, k)
         return st
 
+    def redispatch(self, payload: Dict) -> int:
+        """Re-route an already-released task through the *current* placement.
+
+        The dropout-recovery path: after the runtime rewrites
+        ``self.placed`` for a dead processor, tasks drained from that
+        worker's queue (or intercepted mid-stall) re-enter here. The task
+        keeps its identity — request, record, release timestamp — but its
+        backend/dtype/engine key and target worker are re-read from the
+        re-placed subgraph. Returns the new processor id.
+        """
+        net, k = payload["net"], payload["sg"]
+        p = self.placed[net][k]
+        payload["backend"] = p.backend
+        payload["dtype"] = p.dtype
+        payload["engine_key"] = p.profile_key()
+        payload["record"].processor = p.processor
+        with self._lock:
+            self._seq += 1
+            seq = self._seq
+        self.workers[p.processor].submit((0, p.priority, seq), payload)
+        return p.processor
+
     def cancel_pending(self, reason: str = "PuzzleRuntime closed") -> int:
         """Fail every unfinished request's future; returns how many."""
         cancelled = 0

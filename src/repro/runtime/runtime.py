@@ -17,21 +17,26 @@ Two execution modes:
 """
 from __future__ import annotations
 
+import dataclasses
+import heapq
+import math
 import time
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 
 from ..core.arrivals import ArrivalSpec, arrival_horizon, draw_arrivals
 from ..core.chromosome import PlacedSubgraph, Solution, decode_solution
 from ..core.fastsim import FastSimSpec
+from ..core.faults import FaultSpec
 from ..core.graph import ModelGraph
 from ..core.processors import Processor
 from ..core.simulator import NoiseModel
 from .clock import SimCostSource, VirtualClock, WallClock
 from .coordinator import Coordinator, RequestState
 from .engine import ENGINE_REGISTRY, make_engine
+from .recovery import RecoveryEvent, RecoveryPolicy, greedy_remap
 from .tensorpool import SharedBufferTransport, TensorPool
-from .worker import Worker
+from .worker import DISPATCH_TOKEN, Worker
 
 
 @dataclass
@@ -45,6 +50,12 @@ class RuntimeConfig:
     noise: Optional[NoiseModel] = None
     dispatch_overhead: float = 0.0
     dispatch_pid: int = 0
+    # fault ensemble injected at task delivery (virtual mode), realized by
+    # the same shared FaultStream as the three simulator tiers
+    faults: Optional[FaultSpec] = None
+    # recovery policy: None = serve faults raw (the parity-oracle setting);
+    # a RecoveryPolicy enables timeout/retry and the dropout → backup remap
+    recovery: Optional["RecoveryPolicy"] = None
 
 
 class PuzzleRuntime:
@@ -73,13 +84,25 @@ class PuzzleRuntime:
         self.workers: Dict[int, Worker] = {}
         self._coordinator: Optional[Coordinator] = None
         self._closed = False
+        # recovery bookkeeping (virtual mode): actions taken, dead pids,
+        # optional precomputed backups per dead pid
+        self.recovery_events: List[RecoveryEvent] = []
+        self.measured_cost_skips = 0
+        self._dead: Set[int] = set()
+        self._backups: Dict[int, Tuple[Dict[Tuple[int, int], int],
+                                       Optional[FastSimSpec]]] = {}
 
         cost_source = None
         if self.cfg.virtual:
             cost_source = SimCostSource(
                 spec, processors, noise=self.cfg.noise,
                 dispatch_overhead=self.cfg.dispatch_overhead,
+                faults=self.cfg.faults,
             )
+        self._cost_source = cost_source
+        recovering = (self.cfg.virtual and self.cfg.recovery is not None)
+        remapping = (recovering and self.cfg.recovery.remap
+                     and cost_source.faults is not None)
 
         def on_done(payload, result, quant_t, exec_t):
             assert self._coordinator is not None
@@ -95,6 +118,9 @@ class PuzzleRuntime:
                 proc.pid, proc.name, engines, self.pool, self.transport,
                 on_done, clock=self.clock, cost_source=cost_source,
                 on_start=on_start,
+                recovery=self.cfg.recovery if recovering else None,
+                on_stalled=self._on_stalled if remapping else None,
+                on_recovery=self._record_recovery if recovering else None,
             )
         self._coordinator = Coordinator(
             self.placed, self.workers, executables or {},
@@ -102,6 +128,14 @@ class PuzzleRuntime:
             dispatch_overhead=self.cfg.dispatch_overhead,
             dispatch_pid=self.cfg.dispatch_pid,
         )
+        if remapping:
+            # scheduled at init ⇒ smallest heap sequence numbers: at the
+            # dropout instant the remap fires *before* any same-time
+            # delivery, so no task is handed to the dead worker afterwards
+            for pid, start, end in cost_source.faults.dropouts:
+                if end is None and pid in self.workers:
+                    self.clock.schedule(start,
+                                        lambda p=pid: self._on_dropout(p))
         for w in self.workers.values():
             w.start()
 
@@ -223,6 +257,93 @@ class PuzzleRuntime:
             draw_arrivals(arrivals, periods, num_requests),
             periods, num_requests)
 
+    # -- fault recovery (virtual mode) --------------------------------------
+    def set_backup(
+        self,
+        dead_pid: int,
+        remap: Dict[Tuple[int, int], int],
+        spec: Optional[FastSimSpec] = None,
+    ) -> None:
+        """Register a precomputed fallback for ``dead_pid``'s dropout.
+
+        ``remap`` maps each ``(net, k)`` placed on ``dead_pid`` to its
+        backup processor (``StaticAnalyzer.backup_mapping`` output — the
+        next-best placement excluding that processor). ``spec``, when
+        given, must be the backup solution's FastSimSpec: it shares the
+        partition, so its rows override the primary costs for exactly the
+        remapped subgraphs. Without a registered backup the runtime falls
+        back to :func:`~repro.runtime.recovery.greedy_remap`.
+        """
+        bad = [pid for pid in remap.values() if pid == dead_pid]
+        if bad:
+            raise ValueError(f"backup remap routes back onto dead pid "
+                             f"{dead_pid}")
+        self._backups[dead_pid] = (dict(remap), spec)
+
+    def _record_recovery(self, kind: str, pid: int, detail: Dict) -> None:
+        self.recovery_events.append(RecoveryEvent(
+            kind=kind, time=self.clock.now(), pid=pid, detail=detail))
+
+    def _on_dropout(self, pid: int) -> None:
+        """Permanent-dropout handler: rewire placement, drain the dead queue.
+
+        Idempotent. Re-places every subgraph owned by ``pid`` onto its
+        backup processor (registered via :meth:`set_backup`, else greedy
+        least-loaded), installs backup cost overrides when available, and
+        redispatches the dead worker's waiting tasks through the new
+        placement — in-flight requests keep running, nothing is dropped.
+        A task already *executing* on ``pid`` completes (non-preemptive
+        model); only queued and future work moves.
+        """
+        if pid in self._dead:
+            return
+        self._dead.add(pid)
+        survivors = [q for q in self.workers if q != pid
+                     and q not in self._dead]
+        if not survivors:
+            return  # nothing to remap onto; pid's requests will drop
+        backup = self._backups.get(pid)
+        if backup is not None:
+            remap, bspec = backup
+        else:
+            load = {q: self.workers[q].busy_time for q in survivors}
+            remap = greedy_remap(self.placed, pid, survivors, load=load)
+            bspec = None
+        for (net, k), new_pid in remap.items():
+            p = self.placed[net][k]
+            self.placed[net][k] = dataclasses.replace(p, processor=new_pid)
+        if bspec is not None and self._cost_source is not None:
+            for (net, k) in remap:
+                g = bspec.offsets[net] + k
+                self._cost_source.override[g] = (
+                    bspec.comm[g], bspec.quant[g], bspec.exec_[g])
+        moved = 0
+        dead_w = self.workers[pid]
+        while dead_w._vstore:
+            _, payload = heapq.heappop(dead_w._vstore)
+            if payload is DISPATCH_TOKEN:
+                continue  # coordinator work, not tied to the dead processor
+            self._coordinator.redispatch(payload)
+            moved += 1
+        self._record_recovery("remap", pid, {
+            "subgraphs": len(remap), "requeued": moved,
+            "backup": "registered" if backup is not None else "greedy",
+        })
+
+    def _on_stalled(self, pid: int, payload: Dict) -> None:
+        """Worker hook: a task was delivered onto a permanently-dead pid.
+
+        Belt-and-braces behind :meth:`_on_dropout` (which normally fires
+        first and leaves nothing to stall): make sure the placement is
+        rewired, then re-route the task. If no survivor exists the task is
+        abandoned — the request drops exactly as the raw fault tiers drop
+        it, instead of looping on the dead worker.
+        """
+        self._on_dropout(pid)
+        if self.placed[payload["net"]][payload["sg"]].processor == pid:
+            return
+        self._coordinator.redispatch(payload)
+
     # -- measurement --------------------------------------------------------
     def measured_costs(self) -> Dict[str, float]:
         """Measured execution time per Merkle profile key.
@@ -235,6 +356,12 @@ class PuzzleRuntime:
         signature) and the lower median of the rest is taken — the paper's
         brief on-target execution medians repeats the same way. Empty in
         virtual mode (nothing is actually executed).
+
+        Robust to partial measurement sets: keys whose sample lists are
+        empty or carry only unusable values (non-finite or non-positive —
+        a worker that died mid-run, or a request dropped by an injected
+        fault, leaves such holes) are skipped instead of raising;
+        ``self.measured_cost_skips`` counts them for conformance reports.
         """
         per_key: Dict[str, List[float]] = {}
         for w in self.workers.values():
@@ -242,8 +369,13 @@ class PuzzleRuntime:
                 for key, ts in eng.exec_times.items():
                     per_key.setdefault(key, []).extend(ts)
         out: Dict[str, float] = {}
+        self.measured_cost_skips = 0
         for key, ts in per_key.items():
-            ts = sorted(ts)
+            ts = sorted(t for t in ts
+                        if t is not None and math.isfinite(t) and t > 0.0)
+            if not ts:
+                self.measured_cost_skips += 1
+                continue
             if len(ts) > 2:
                 ts = ts[:-1]
             out[key] = ts[(len(ts) - 1) // 2]
@@ -273,7 +405,17 @@ class PuzzleRuntime:
         for w in self.workers.values():
             w.stop(join=True)
         if self._coordinator is not None:
-            self._coordinator.cancel_pending()
+            reason = "PuzzleRuntime closed"
+            faults = self.cfg.faults
+            if faults is not None and not faults.empty and faults.dropouts:
+                # name the injected fault so a pending future's error says
+                # *why* the request never finished, not just that it didn't
+                descr = ", ".join(
+                    f"processor {pid} dropped at t={start:g}"
+                    + ("" if end is None else f" (repaired at t={end:g})")
+                    for pid, start, end in faults.dropouts)
+                reason += f" with injected faults: {descr}"
+            self._coordinator.cancel_pending(reason)
 
     def __enter__(self) -> "PuzzleRuntime":
         return self

@@ -17,6 +17,7 @@ deterministic, instant replay whose task trace is bit-comparable to
 from __future__ import annotations
 
 import heapq
+import math
 import queue
 import threading
 from dataclasses import dataclass, field
@@ -26,7 +27,16 @@ import numpy as np
 
 from .clock import SimCostSource, WallClock
 from .engine import Engine, make_engine
+from .recovery import RecoveryPolicy
 from .tensorpool import SharedBufferTransport, TensorPool
+
+
+class WorkerExecutionError(RuntimeError):
+    """A task failed inside a Worker thread (staging or execution).
+
+    Carries enough context — subgraph, processor, backend, original
+    exception — for the client to tell *which placement* broke. Raised into
+    the owning request's future only; the worker threads keep serving."""
 
 
 @dataclass(order=True)
@@ -66,6 +76,9 @@ class Worker:
         clock=None,
         cost_source: Optional[SimCostSource] = None,
         on_start: Optional[Callable[[Any], None]] = None,
+        recovery: Optional[RecoveryPolicy] = None,
+        on_stalled: Optional[Callable[[int, Any], None]] = None,
+        on_recovery: Optional[Callable[[str, int, Dict], None]] = None,
     ):
         self.pid = pid
         self.name = name
@@ -74,6 +87,11 @@ class Worker:
         self.transport = transport
         self.on_done = on_done
         self.on_start = on_start
+        # virtual-mode recovery: policy knobs + runtime hooks (None = serve
+        # faults raw, the parity-oracle setting)
+        self.recovery = recovery
+        self.on_stalled = on_stalled
+        self.on_recovery = on_recovery
         self.clock = clock if clock is not None else WallClock()
         self.cost_source = cost_source
         self.virtual = cost_source is not None
@@ -114,6 +132,7 @@ class Worker:
         """
         if self.virtual:
             self._stop = True
+            self._vstore.clear()  # drop waiting items: the clock is done
             return
         if not self._stop:
             self._stop = True
@@ -151,7 +170,21 @@ class Worker:
             self.clock.schedule(ov, self._vpull)
             return
         comm, quant, exec_t = src.costs(payload["net"], payload["sg"])
+        clean_total = exec_t + quant + comm  # pre-noise, pre-fault estimate
         exec_t = src.noisy_exec(self.pid, exec_t)
+        stall = 0.0
+        if src.fault_stream is not None:
+            exec_t, stall = src.fault_stream.service(
+                self.pid, self.clock.now(), exec_t)
+        pol = self.recovery
+        if pol is not None and math.isinf(stall) and self.on_stalled is not None:
+            # delivered onto a permanently-dead processor with recovery on:
+            # hand the task back for re-routing instead of stalling forever,
+            # then keep draining the queue (the reroute cannot come back —
+            # the runtime rewires the placement before redispatching)
+            self.on_stalled(self.pid, payload)
+            self._vpull()
+            return
         payload["started"] = self.clock.now()
         payload["comm_s"] = comm
         payload["quant_s"] = quant
@@ -159,7 +192,35 @@ class Worker:
         if self.on_start is not None:
             self.on_start(payload)
         total = exec_t + quant + comm
-        self.busy_time += total
+        if stall > 0.0:
+            # delivered to a dropped processor: stall until the repair (an
+            # end event at t=inf never fires — same drop semantics as the
+            # simulator tiers)
+            payload["stall_s"] = stall
+            total = stall + total
+        if pol is not None and stall == 0.0:
+            # straggler watchdog — stall time is excluded: retrying into a
+            # dead/throttled-window processor cannot help, the remap can
+            timeout_s = pol.timeout_for(clean_total)
+            attempts = payload.get("attempts", 0)
+            if total > timeout_s and attempts < pol.max_retries:
+                # abandon the attempt at the timeout, re-deliver after a
+                # linear backoff; the retry re-draws the noise and fault
+                # streams (recovery runs are not parity-compared)
+                payload["attempts"] = attempts + 1
+                self.busy_time += timeout_s
+                if self.on_recovery is not None:
+                    self.on_recovery("retry", self.pid, {
+                        "net": payload["net"], "sg": payload["sg"],
+                        "request": payload["request"],
+                        "attempt": attempts + 1,
+                        "timeout_s": timeout_s, "total_s": total,
+                    })
+                self.clock.schedule(timeout_s + pol.backoff * (attempts + 1),
+                                    lambda: self._vdeliver(payload))
+                return
+        if not math.isinf(total):
+            self.busy_time += total
         self.clock.schedule(total, lambda: self._vend(payload))
 
     def _vend(self, payload: Any) -> None:
@@ -177,6 +238,13 @@ class Worker:
         else:
             self._vidle = True
 
+    def _wrap_error(self, payload: Any, stage: str,
+                    e: Exception) -> WorkerExecutionError:
+        return WorkerExecutionError(
+            f"{stage} failed for subgraph (net={payload.get('net')}, "
+            f"sg={payload.get('sg')}) on processor {self.pid} ({self.name}), "
+            f"backend={payload.get('backend')!r}: {type(e).__name__}: {e}")
+
     # -- dequant/staging thread ---------------------------------------------
     def _quant_loop(self) -> None:
         while True:
@@ -187,20 +255,24 @@ class Worker:
             payload = task.payload
             t0 = self.clock.now()
             inputs = payload.get("inputs")
-            prepared = []
-            if inputs is not None:
-                for tensor, src_dtype in inputs:
-                    # dtype boundary: (de)quantize = convert through a pooled
-                    # staging buffer (mirrors the Worker dequant path)
-                    want = payload["dtype"]
-                    if src_dtype != want:
-                        arr = np.asarray(tensor, dtype=_DTYPE_NP[want])
-                        arr = self.pool.stage(arr)
-                        prepared.append(arr)
-                    else:
-                        prepared.append(self.transport.transfer(tensor))
+            prepared: List = []
+            err: Optional[Exception] = None
+            try:
+                if inputs is not None:
+                    for tensor, src_dtype in inputs:
+                        # dtype boundary: (de)quantize = convert through a
+                        # pooled staging buffer (the Worker dequant path)
+                        want = payload["dtype"]
+                        if src_dtype != want:
+                            arr = np.asarray(tensor, dtype=_DTYPE_NP[want])
+                            arr = self.pool.stage(arr)
+                            prepared.append(arr)
+                        else:
+                            prepared.append(self.transport.transfer(tensor))
+            except Exception as e:  # fail the request, not the thread
+                err = self._wrap_error(payload, "input staging", e)
             quant_t = self.clock.now() - t0
-            self._exec_queue.put((payload, prepared, quant_t))
+            self._exec_queue.put((payload, prepared, quant_t, err))
 
     # -- execution thread -----------------------------------------------------
     def _exec_loop(self) -> None:
@@ -208,18 +280,22 @@ class Worker:
             item = self._exec_queue.get()
             if item is None:
                 return
-            payload, prepared, quant_t = item
-            engine: Engine = self.engines[payload["backend"]]
+            payload, prepared, quant_t, err = item
             t0 = self.clock.now()
             payload["started"] = t0
             if self.on_start is not None:
                 self.on_start(payload)
-            try:
-                out = engine.execute(payload["engine_key"],
-                                     prepared if prepared else None)
-                err = None
-            except Exception as e:  # surface, don't kill the worker
-                out, err = None, e
+            out = None
+            if err is None:
+                try:
+                    # the engine lookup lives *inside* the try: an unknown
+                    # backend key must fail the request, not kill this
+                    # thread and strand the coordinator
+                    engine: Engine = self.engines[payload["backend"]]
+                    out = engine.execute(payload["engine_key"],
+                                         prepared if prepared else None)
+                except Exception as e:  # surface, don't kill the worker
+                    err = self._wrap_error(payload, "execution", e)
             exec_t = self.clock.now() - t0
             # staged input buffers are consumed by the engine call — return
             # them to the pool (the Tensor Pool recycling path, §5.3)

@@ -1,0 +1,335 @@
+"""Fault-injection differential parity: all four tiers, zero divergence.
+
+Randomized fault ensembles (dropouts permanent and repairable, throttle
+windows, heavy-tailed stragglers — often stacked with noise, dispatch
+tokens and non-periodic arrivals) drive the reference DES, FastSimulator,
+BatchSimulator and the virtual-clock PuzzleRuntime; every comparison
+demands *bit-identical* traces. The shared :class:`FaultStream` draws in
+global delivery order, so any tier whose delivery sequence drifts under
+faults fails here loudly.
+
+``test_bulk_differential_parity_faults`` covers 100+ randomized cases with
+deterministic seeds. Run as a script to produce the CI artifact::
+
+    PYTHONPATH=src:tests python tests/test_fault_differential.py \
+        --report results/fault_report.json
+"""
+import json
+import math
+import os
+import random
+import sys
+
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import (
+    NO_FAULTS,
+    ArrivalSpec,
+    BatchLane,
+    BatchSimulator,
+    FastSimulator,
+    FaultSpec,
+    NoiseModel,
+    PAPER_COMM_MODEL,
+    Profiler,
+    RuntimeSimulator,
+    SolutionFactory,
+    build_spec,
+    decode_solution,
+    mobile_processors,
+)
+from repro.core.profiler import AnalyticMobileBackend
+from repro.runtime.conformance import run_virtual_schedule
+
+from test_batchsim_properties import (
+    _assert_identical,
+    _random_arrival,
+    _random_problem,
+)
+
+PROCS = mobile_processors()
+PROFILER = Profiler(AnalyticMobileBackend(PROCS))
+
+
+# -- FaultSpec unit behaviour -------------------------------------------------
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError):
+        FaultSpec(dropouts=((0, -0.1, None),))
+    with pytest.raises(ValueError):
+        FaultSpec(dropouts=((0, 0.1, 0.0),))
+    with pytest.raises(ValueError):
+        FaultSpec(throttles=((0, 0.5, 0.5, 2.0),))
+    with pytest.raises(ValueError):
+        FaultSpec(throttles=((0, 0.1, 0.5, 0.0),))
+    with pytest.raises(ValueError):
+        FaultSpec(straggler_prob=1.0)
+    with pytest.raises(ValueError):
+        FaultSpec(straggler_prob=0.5, straggler_shape=0.0)
+
+
+def test_fault_spec_canonicalization():
+    a = FaultSpec(dropouts=((2, 0.5, None), (1, 0.1, 0.2)),
+                  throttles=((1, 0.4, 0.6, 2.0), (0, 0.1, 0.3, 3.0)))
+    b = FaultSpec(dropouts=((1, 0.1, 0.2), (2, 0.5, None)),
+                  throttles=((0, 0.1, 0.3, 3.0), (1, 0.4, 0.6, 2.0)))
+    assert a == b
+    assert hash(a) == hash(b)
+    assert a.key() == b.key()
+    # shape is zeroed when stragglers are off: one representation per ensemble
+    assert FaultSpec(straggler_shape=1.5) == FaultSpec(straggler_shape=9.0)
+
+
+def test_fault_spec_json_round_trip():
+    spec = FaultSpec(dropouts=((2, 0.012, None), (1, 0.002, 0.004)),
+                     throttles=((0, 0.002, 0.008, 3.0),),
+                     straggler_prob=0.2, straggler_shape=1.5, seed=13)
+    doc = json.loads(json.dumps(spec.to_json()))
+    assert FaultSpec.from_json(doc) == spec
+    # serialize-by-omission: the empty spec is just its seed
+    assert FaultSpec(seed=7).to_json() == {"seed": 7}
+    assert FaultSpec.from_json({"seed": 7}) == FaultSpec(seed=7)
+
+
+def test_fault_spec_empty_and_dropped_pids():
+    assert NO_FAULTS.empty
+    assert FaultSpec(seed=99).empty
+    spec = FaultSpec(dropouts=((3, 0.01, None), (1, 0.02, 0.5),
+                               (0, 0.03, None)))
+    assert not spec.empty
+    assert spec.dropped_pids() == (0, 3)  # permanent only, sorted
+
+
+def test_empty_faults_match_no_faults():
+    """faults=NO_FAULTS must be byte-identical to faults=None (the engines
+    normalize empty specs away, so the clean path is untouched)."""
+    rng = random.Random(0xFA017)
+    nets, groups, periods = _random_problem(rng)
+    sol = SolutionFactory(nets, num_processors=len(PROCS),
+                          rng=random.Random(3), cut_prob=0.3).random_solution()
+    placed = decode_solution(sol, nets)
+    noise = NoiseModel(seed=5)
+    kw = dict(placed=placed, processors=PROCS, profiler=PROFILER,
+              comm_model=PAPER_COMM_MODEL, groups=groups, periods=periods,
+              num_requests=4, noise=noise, dispatch_overhead=150e-6)
+    clean = RuntimeSimulator(**kw).run()
+    empty = RuntimeSimulator(faults=NO_FAULTS, **kw).run()
+    _assert_identical(clean, empty, "empty-faults-vs-none")
+    spec = build_spec(placed, PROCS, PROFILER, PAPER_COMM_MODEL)
+    fast = FastSimulator(spec, groups=groups, periods=periods,
+                         num_requests=4, noise=noise,
+                         dispatch_overhead=150e-6,
+                         faults=NO_FAULTS).run(collect_tasks=True)
+    _assert_identical(clean, fast, "empty-faults-fastsim")
+
+
+def test_faults_do_not_break_lean_path():
+    """The lean fastsim loop must still be taken when no faults are set,
+    and must be bypassed (identically) when they are."""
+    rng = random.Random(0x1EA9)
+    nets, groups, periods = _random_problem(rng)
+    sol = SolutionFactory(nets, num_processors=len(PROCS),
+                          rng=random.Random(4), cut_prob=0.3).random_solution()
+    placed = decode_solution(sol, nets)
+    spec = build_spec(placed, PROCS, PROFILER, PAPER_COMM_MODEL)
+    faults = FaultSpec(throttles=((0, 0.0, 0.002, 2.0),), seed=1)
+    ref = RuntimeSimulator(
+        placed=placed, processors=PROCS, profiler=PROFILER,
+        comm_model=PAPER_COMM_MODEL, groups=groups, periods=periods,
+        num_requests=4, faults=faults).run()
+    fast = FastSimulator(spec, groups=groups, periods=periods,
+                         num_requests=4, faults=faults).run(collect_tasks=True)
+    _assert_identical(ref, fast, "faulted-full-loop")
+
+
+# -- randomized four-tier parity ----------------------------------------------
+
+def _random_fault(rng: random.Random, periods, num_requests) -> FaultSpec:
+    """A random non-empty fault ensemble scaled to the run's time span."""
+    span = max(periods) * num_requests
+    dropouts = []
+    for _ in range(rng.randint(0, 2)):
+        pid = rng.randrange(len(PROCS))
+        start = rng.uniform(0.0, span)
+        repair = None if rng.random() < 0.5 else rng.uniform(
+            0.05 * span, 0.5 * span)
+        dropouts.append((pid, start, repair))
+    throttles = []
+    for _ in range(rng.randint(0, 2)):
+        pid = rng.randrange(len(PROCS))
+        t0 = rng.uniform(0.0, 0.8 * span)
+        throttles.append((pid, t0, t0 + rng.uniform(0.05 * span, 0.6 * span),
+                          rng.choice((0.5, 1.5, 2.0, 4.0))))
+    prob = rng.choice((0.0, 0.1, 0.25, 0.5))
+    spec = FaultSpec(
+        dropouts=tuple(dropouts), throttles=tuple(throttles),
+        straggler_prob=prob,
+        straggler_shape=rng.choice((0.8, 1.5, 2.5)),
+        seed=rng.randrange(1 << 16),
+    )
+    if spec.empty:  # re-roll into a guaranteed-active ensemble
+        spec = FaultSpec(straggler_prob=0.25, straggler_shape=1.5,
+                         seed=rng.randrange(1 << 16))
+    return spec
+
+
+def _run_four_engines_faults(rng: random.Random, measured: bool,
+                             with_arrivals: bool = False):
+    """One random faulted case through all four tiers; assert identity.
+
+    Returns ``(spec, ref)`` so callers can track which fault classes the
+    sweep actually exercised.
+    """
+    nets, groups, periods = _random_problem(rng)
+    fac = SolutionFactory(nets, num_processors=len(PROCS),
+                          rng=random.Random(rng.randrange(1 << 30)),
+                          cut_prob=rng.uniform(0.1, 0.5))
+    sol = fac.random_solution()
+    num_requests = rng.randint(3, 6)
+    faults = _random_fault(rng, periods, num_requests)
+    arrivals = (_random_arrival(rng, groups, periods, num_requests)
+                if with_arrivals else None)
+    noise = NoiseModel(seed=rng.randrange(1 << 16)) if measured else None
+    dispatch = 150e-6 if measured else 0.0
+
+    placed = decode_solution(sol, nets)
+    ref = RuntimeSimulator(
+        placed=placed, processors=PROCS, profiler=PROFILER,
+        comm_model=PAPER_COMM_MODEL, groups=groups, periods=periods,
+        num_requests=num_requests, noise=noise, dispatch_overhead=dispatch,
+        arrivals=arrivals, faults=faults,
+    ).run()
+    spec = build_spec(placed, PROCS, PROFILER, PAPER_COMM_MODEL)
+    fast = FastSimulator(
+        spec, groups=groups, periods=periods, num_requests=num_requests,
+        noise=noise, dispatch_overhead=dispatch, arrivals=arrivals,
+        faults=faults,
+    ).run(collect_tasks=True)
+    batch = BatchSimulator(
+        [BatchLane(spec=spec, periods=periods, num_requests=num_requests,
+                   noise=noise, dispatch_overhead=dispatch,
+                   arrivals=arrivals, faults=faults)],
+        groups, PROCS,
+    ).run(collect_tasks=True)
+    virtual = run_virtual_schedule(
+        nets, sol, PROCS, spec, groups, periods, num_requests,
+        noise=noise, dispatch_overhead=dispatch, arrivals=arrivals,
+        faults=faults,
+    )
+    _assert_identical(ref, fast, "faults:fastsim-vs-des")
+    _assert_identical(ref, batch.result(0), "faults:batchsim-vs-des")
+    _assert_identical(ref, virtual, "faults:virtual-runtime-vs-des")
+    return faults, ref
+
+
+def _coverage_update(cov, faults, ref):
+    if faults.dropped_pids():
+        cov.add("permanent-dropout")
+    if any(r is not None for _, _, r in faults.dropouts):
+        cov.add("repairable-dropout")
+    if faults.throttles:
+        cov.add("throttle")
+    if faults.straggler_prob > 0.0:
+        cov.add("straggler")
+    if any(math.isinf(r.makespan) for r in ref.requests):
+        cov.add("dropped-request")
+
+
+def _bulk_sweep(n_clean: int, n_measured: int, n_arrival: int):
+    """The deterministic-seed fault sweep; returns (cases, coverage)."""
+    cov = set()
+    cases = 0
+    for seed in range(n_clean):
+        faults, ref = _run_four_engines_faults(
+            random.Random(0xFA41 + seed), measured=False)
+        _coverage_update(cov, faults, ref)
+        cases += 1
+    for seed in range(n_measured):
+        faults, ref = _run_four_engines_faults(
+            random.Random(0x5E11 + seed), measured=True)
+        _coverage_update(cov, faults, ref)
+        cases += 1
+    for seed in range(n_arrival):
+        faults, ref = _run_four_engines_faults(
+            random.Random(0xC0DE + seed), measured=True, with_arrivals=True)
+        _coverage_update(cov, faults, ref)
+        cases += 1
+    return cases, cov
+
+
+def test_bulk_differential_parity_faults():
+    """100+ randomized fault cases, zero max-abs diff across all FOUR
+    engine tiers; the sweep must exercise every fault class, including
+    requests actually dropped by a permanent dropout."""
+    cases, cov = _bulk_sweep(40, 40, 25)
+    assert cases >= 100
+    assert cov >= {"permanent-dropout", "repairable-dropout", "throttle",
+                   "straggler", "dropped-request"}, cov
+
+
+@given(st.integers(min_value=0, max_value=1 << 30))
+@settings(max_examples=15, deadline=None)
+def test_property_parity_faults(seed):
+    rng = random.Random(seed)
+    _run_four_engines_faults(rng, measured=rng.random() < 0.5,
+                             with_arrivals=rng.random() < 0.3)
+
+
+def test_fault_stream_draw_discipline():
+    """One rng.random() per service() call when stragglers are on — the
+    stream position is a pure function of the delivery count."""
+    spec = FaultSpec(straggler_prob=0.3, straggler_shape=1.5, seed=21)
+    from repro.core import FaultStream
+    a, b = FaultStream(spec), FaultStream(spec)
+    # interleave different pids/times on one stream: draws must not depend
+    # on pid (a tier whose per-pid order differs would otherwise diverge)
+    out_a = [a.service(0, 0.001 * i, 1.0)[0] for i in range(50)]
+    out_b = [b.service(i % 3, 0.002 * i, 1.0)[0] for i in range(50)]
+    assert out_a == out_b
+    inflated = sum(1 for v in out_a if v > 1.0)
+    assert 0 < inflated < 50
+    assert all(v >= 1.0 for v in out_a)
+
+
+# -- CI artifact --------------------------------------------------------------
+
+def write_report(out_path: str) -> int:
+    """Fault golden + differential sweep through all four tiers; write the
+    CI artifact. Returns the number of failures (0 = pass)."""
+    import test_golden_traces as gt
+
+    report = {"golden": {}, "differential": {}}
+    failures = 0
+    with open(os.path.join(gt.GOLDEN_DIR, "fault_dropout_mix.json")) as f:
+        golden = json.load(f)
+    for engine, res in gt._engine_results("fault_dropout_mix").items():
+        diffs = gt._trace_diff(gt._serialize(res), golden)
+        report["golden"][engine] = diffs
+        if not diffs["exact"]:
+            failures += 1
+        print(f"fault_dropout_mix {engine:16s} "
+              f"{'ok' if diffs['exact'] else 'DIFF'}")
+    try:
+        cases, cov = _bulk_sweep(40, 40, 25)
+        report["differential"] = {
+            "cases": cases, "coverage": sorted(cov), "passed": True}
+    except AssertionError as e:
+        failures += 1
+        report["differential"] = {"passed": False, "error": str(e)}
+    print(f"differential: {report['differential']}")
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=True)
+    print(f"wrote {out_path}")
+    return failures
+
+
+if __name__ == "__main__":
+    out = "results/fault_report.json"
+    if "--report" in sys.argv:
+        idx = sys.argv.index("--report")
+        if idx + 1 < len(sys.argv):
+            out = sys.argv[idx + 1]
+    sys.exit(1 if write_report(out) else 0)

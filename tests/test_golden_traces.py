@@ -28,6 +28,7 @@ from repro.core import (
     BatchLane,
     BatchSimulator,
     FastSimulator,
+    FaultSpec,
     NoiseModel,
     PAPER_COMM_MODEL,
     Profiler,
@@ -95,33 +96,47 @@ def _nets_runtime_conformance():
 
 
 #: name -> (nets, groups, periods, num_requests, noise seed, dispatch, pin,
-#:          arrivals)
+#:          arrivals, faults)
 SCENARIOS = {
     "tri_chain_clean": (
-        _nets_tri_chain, [[0, 1, 2]], [0.005], 8, None, 0.0, None, None),
+        _nets_tri_chain, [[0, 1, 2]], [0.005], 8, None, 0.0, None, None,
+        None),
     "diamond_mix_measured": (
         _nets_diamond_mix, [[0, 1], [2, 3]], [0.004, 0.006], 6, 7, 150e-6,
-        None, None),
+        None, None, None),
     "diamond_mix_overload": (
         _nets_diamond_mix, [[0, 1], [2, 3]], [2e-6, 2e-6], 30, None, 0.0, 0,
-        None),
+        None, None),
     # the device-in-the-loop tier's canonical trace (PR 4): replayed through
     # all four engine tiers including the virtual-clock PuzzleRuntime
     "runtime_conformance": (
         _nets_runtime_conformance, [[0, 2], [1]], [0.035, 0.05], 8, 3,
-        150e-6, None, None),
+        150e-6, None, None, None),
     # non-periodic arrivals (PR 5): Poisson traffic + noise + dispatch
     # tokens — the bursty-load canonical trace, replayed through all four
     # tiers with the shared pre-drawn arrival-timestamp stream
     "poisson_burst_measured": (
         _nets_diamond_mix, [[0, 1], [2, 3]], [0.004, 0.006], 8, 5, 150e-6,
-        None, ArrivalSpec(kind="poisson", seed=42)),
+        None, ArrivalSpec(kind="poisson", seed=42), None),
+    # fault injection (PR 6): a permanent mid-run processor dropout, a
+    # thermal-throttle window and heavy-tailed stragglers in one ensemble,
+    # on top of noise + dispatch tokens — the canonical faulted trace,
+    # realized by the one shared seeded fault stream in all four tiers
+    # (dropped requests at the horizon must match exactly)
+    "fault_dropout_mix": (
+        _nets_diamond_mix, [[0, 1], [2, 3]], [0.004, 0.006], 8, 7, 150e-6,
+        None, None,
+        FaultSpec(
+            dropouts=((2, 0.012, None),),
+            throttles=((0, 0.002, 0.008, 3.0),),
+            straggler_prob=0.2, straggler_shape=1.5, seed=13,
+        )),
 }
 
 
 def _run_reference(name):
     (nets_fn, groups, periods, nr, noise_seed, dispatch, pin,
-     arrivals) = SCENARIOS[name]
+     arrivals, faults) = SCENARIOS[name]
     nets = nets_fn()
     sol = _solution(nets, seed=11, pin=pin)
     placed = decode_solution(sol, nets)
@@ -130,9 +145,10 @@ def _run_reference(name):
         placed=placed, processors=PROCS, profiler=PROFILER,
         comm_model=PAPER_COMM_MODEL, groups=groups, periods=periods,
         num_requests=nr, noise=noise, dispatch_overhead=dispatch,
-        arrivals=arrivals,
+        arrivals=arrivals, faults=faults,
     ).run()
-    return nets, sol, groups, periods, nr, noise, dispatch, arrivals, res
+    return (nets, sol, groups, periods, nr, noise, dispatch, arrivals,
+            faults, res)
 
 
 # single schema source: the runtime conformance harness serializes the same
@@ -161,7 +177,7 @@ def _engine_results(name):
     CI ``--check`` gate — a new engine parameter (like ``arrivals`` in this
     PR) cannot silently reach only one of the two.
     """
-    (nets, sol, groups, periods, nr, noise, dispatch, arrivals,
+    (nets, sol, groups, periods, nr, noise, dispatch, arrivals, faults,
      ref) = _run_reference(name)
     spec = build_spec(decode_solution(sol, nets), PROCS, PROFILER,
                       PAPER_COMM_MODEL)
@@ -170,11 +186,12 @@ def _engine_results(name):
         "fastsim": FastSimulator(
             spec, groups=groups, periods=periods, num_requests=nr,
             noise=noise, dispatch_overhead=dispatch, arrivals=arrivals,
+            faults=faults,
         ).run(collect_tasks=True),
         "batchsim": BatchSimulator(
             [BatchLane(spec=spec, periods=periods, num_requests=nr,
                        noise=noise, dispatch_overhead=dispatch,
-                       arrivals=arrivals)],
+                       arrivals=arrivals, faults=faults)],
             groups, PROCS,
         ).run(collect_tasks=True).result(0),
         # fourth tier: the actual Coordinator/Worker dispatch code replaying
@@ -183,6 +200,7 @@ def _engine_results(name):
         "virtual-runtime": run_virtual_schedule(
             nets, sol, PROCS, spec, groups, periods, nr,
             noise=noise, dispatch_overhead=dispatch, arrivals=arrivals,
+            faults=faults,
         ),
     }
 
@@ -236,6 +254,27 @@ def test_golden_traces_have_interesting_structure():
     assert any(m is not None for m in burst["makespans"])
     # noise + dispatch exercised on the bursty path too
     assert any(t[8] > 0 for t in burst["tasks"]), "no cross-processor comm"
+    # the fault trace must show all three fault classes actually biting:
+    # a permanent dropout dropping requests mid-run (while earlier requests
+    # completed), the throttle window inflating in-window work, and the
+    # straggler stream adding exec variance on top of the noise model
+    with open(os.path.join(GOLDEN_DIR, "fault_dropout_mix.json")) as f:
+        faulted = json.load(f)
+    spec = SCENARIOS["fault_dropout_mix"][8]
+    dead = spec.dropped_pids()[0]
+    assert any(m is None for m in faulted["makespans"]), (
+        "fault trace dropped no requests")
+    assert any(m is not None for m in faulted["makespans"])
+    t_drop = dict(
+        (d[0], d[1]) for d in spec.dropouts)[dead]
+    dead_tasks = [t for t in faulted["tasks"] if t[4] == dead]
+    assert dead_tasks, "dead processor never used before the dropout"
+    assert all(t[6] <= t_drop for t in dead_tasks), (
+        "task started on the dead processor after its dropout")
+    pid_t, t0, t1, factor = spec.throttles[0]
+    in_window = [t for t in faulted["tasks"]
+                 if t[4] == pid_t and t0 <= t[6] < t1]
+    assert in_window, "throttle window caught no deliveries"
 
 
 def regenerate():

@@ -1,0 +1,379 @@
+"""Fault recovery: dropout → backup remap, straggler retries, worker
+hardening (graceful degradation on top of the raw fault layer).
+
+The raw fault layer is parity-tested in test_fault_differential /
+test_golden_traces; everything here runs with a RecoveryPolicy, which is
+explicitly *not* bit-comparable to the simulator tiers (retries and remaps
+consume extra stream draws). Assertions are therefore behavioural:
+requests survive, events are recorded, placements move off dead
+processors, worker threads stay alive.
+"""
+import math
+import queue
+import random
+import threading
+
+import pytest
+
+from repro.core import (
+    PAPER_COMM_MODEL,
+    FaultSpec,
+    Profiler,
+    SolutionFactory,
+    build_spec,
+    decode_solution,
+    mobile_processors,
+)
+from repro.core.analyzer import StaticAnalyzer
+from repro.core.graph import branching_graph, chain_graph
+from repro.core.profiler import AnalyticMobileBackend
+from repro.core.scenarios import Scenario
+from repro.runtime import (
+    PuzzleRuntime,
+    RecoveryPolicy,
+    RuntimeConfig,
+    Worker,
+    WorkerExecutionError,
+    greedy_remap,
+)
+from repro.runtime.tensorpool import SharedBufferTransport, TensorPool
+
+PROCS = mobile_processors()
+PROFILER = Profiler(AnalyticMobileBackend(PROCS))
+
+
+def _nets():
+    return [
+        chain_graph("ra", [("conv", 4e6, 1000, 4000)] * 5),
+        branching_graph("rb", [("conv", 2e6, 800, 2000)] * 4,
+                        [(0, 1), (0, 2), (1, 3), (2, 3)]),
+        chain_graph("rc", [("fc", 8e6, 2000, 8000)] * 3),
+    ]
+
+
+def _solution_using(nets, pid, seed0=0):
+    """First SolutionFactory draw that places work on ``pid``."""
+    for seed in range(seed0, seed0 + 64):
+        fac = SolutionFactory(nets, num_processors=len(PROCS),
+                              rng=random.Random(seed), cut_prob=0.4)
+        sol = fac.random_solution()
+        if any(p.processor == pid
+               for pl in decode_solution(sol, nets) for p in pl):
+            return sol
+    raise AssertionError(f"no draw uses pid {pid}")
+
+
+def _runtime(nets, sol, faults, recovery):
+    spec = build_spec(decode_solution(sol, nets), PROCS, PROFILER,
+                      PAPER_COMM_MODEL)
+    return PuzzleRuntime(
+        nets, sol, PROCS,
+        config=RuntimeConfig(virtual=True, faults=faults, recovery=recovery),
+        spec=spec,
+    ), spec
+
+
+GROUPS, PERIODS, NR = [[0, 1], [2]], [0.004, 0.006], 8
+DROPOUT = FaultSpec(dropouts=((2, 0.010, None),), seed=5)
+
+
+# -- dropout → remap ---------------------------------------------------------
+
+def test_dropout_remap_keeps_inflight_requests():
+    """The acceptance scenario: a mid-run permanent dropout with recovery
+    enabled loses zero requests, while the same run without recovery drops
+    every request that needs the dead processor."""
+    nets = _nets()
+    sol = _solution_using(nets, pid=2)
+
+    rt_raw, _ = _runtime(nets, sol, DROPOUT, recovery=None)
+    with rt_raw:
+        raw = rt_raw.run_periodic(GROUPS, PERIODS, num_requests=NR)
+    dropped_raw = sum(st.makespan is None for gl in raw for st in gl)
+    assert dropped_raw > 0, "scenario must actually lose requests raw"
+
+    rt, _ = _runtime(nets, sol, DROPOUT, recovery=RecoveryPolicy())
+    with rt:
+        res = rt.run_periodic(GROUPS, PERIODS, num_requests=NR)
+    assert all(st.makespan is not None for gl in res for st in gl)
+    remaps = [e for e in rt.recovery_events if e.kind == "remap"]
+    assert len(remaps) == 1 and remaps[0].pid == 2
+    assert remaps[0].time == 0.010
+    # nothing starts on the dead processor after the drop instant
+    for rec in rt.coordinator.trace:
+        if rec.processor == 2 and rec.started is not None:
+            assert rec.started <= 0.010
+    # the placement itself was rewired off the dead pid
+    assert all(p.processor != 2 for pl in rt.placed for p in pl)
+
+
+def test_dropout_remap_uses_registered_backup():
+    nets = _nets()
+    sol = _solution_using(nets, pid=2)
+    sc = Scenario(name="rt-backup", graphs=tuple(nets), groups=((0, 1), (2,)))
+    an = StaticAnalyzer(sc, PROCS, PROFILER, PAPER_COMM_MODEL)
+    backup_sol, remap = an.backup_mapping(sol, dead_pid=2)
+    assert remap and all(pid != 2 for pid in remap.values())
+    bspec = build_spec(decode_solution(backup_sol, nets), PROCS, PROFILER,
+                       PAPER_COMM_MODEL)
+
+    rt, _ = _runtime(nets, sol, DROPOUT, recovery=RecoveryPolicy())
+    rt.set_backup(2, remap, spec=bspec)
+    with rt:
+        res = rt.run_periodic(GROUPS, PERIODS, num_requests=NR)
+    assert all(st.makespan is not None for gl in res for st in gl)
+    ev = [e for e in rt.recovery_events if e.kind == "remap"][0]
+    assert ev.detail["backup"] == "registered"
+    # the backup spec's rows now override the primary costs for exactly
+    # the remapped subgraphs
+    src = rt._cost_source
+    assert set(src.override) == {bspec.offsets[n] + k for n, k in remap}
+    for (n, k), new_pid in remap.items():
+        assert rt.placed[n][k].processor == new_pid
+
+
+def test_set_backup_rejects_remap_onto_dead_pid():
+    nets = _nets()
+    sol = _solution_using(nets, pid=2)
+    rt, _ = _runtime(nets, sol, DROPOUT, recovery=RecoveryPolicy())
+    with rt:
+        with pytest.raises(ValueError):
+            rt.set_backup(2, {(0, 0): 2})
+
+
+def test_stall_intercept_reroutes_without_scheduled_remap():
+    """Belt-and-braces path: if the dropout handler did NOT fire first
+    (here: forcibly unscheduled), a task delivered onto the dead processor
+    is intercepted mid-stall, triggers the remap, and is re-routed — the
+    request still completes."""
+    nets = _nets()
+    sol = _solution_using(nets, pid=2)
+    rt, _ = _runtime(nets, sol, DROPOUT, recovery=RecoveryPolicy())
+    # at construction time the only scheduled events are the dropout
+    # handlers — drop them to force deliveries onto the dead pid
+    assert rt.clock.pending == 1
+    rt.clock._events.clear()
+    with rt:
+        res = rt.run_periodic(GROUPS, PERIODS, num_requests=NR)
+    assert all(st.makespan is not None for gl in res for st in gl)
+    remaps = [e for e in rt.recovery_events if e.kind == "remap"]
+    assert len(remaps) == 1 and remaps[0].time >= 0.010
+
+
+def test_no_survivors_degrades_without_livelock():
+    """A dropout with no surviving processor cannot be remapped: affected
+    requests drop (exactly like the raw tiers), but the run terminates."""
+    nets = _nets()[:1]
+    one_proc = PROCS[:1]
+    profiler = Profiler(AnalyticMobileBackend(one_proc))
+    fac = SolutionFactory(nets, num_processors=1, rng=random.Random(1),
+                          cut_prob=0.5)
+    sol = fac.random_solution()
+    spec = build_spec(decode_solution(sol, nets), one_proc, profiler,
+                      PAPER_COMM_MODEL)
+    faults = FaultSpec(dropouts=((0, 0.006, None),), seed=1)
+    rt = PuzzleRuntime(
+        nets, sol, one_proc,
+        config=RuntimeConfig(virtual=True, faults=faults,
+                             recovery=RecoveryPolicy()),
+        spec=spec,
+    )
+    with rt:
+        res = rt.run_periodic([[0]], [0.004], num_requests=6)
+    dropped = sum(st.makespan is None for st in res[0])
+    assert dropped > 0
+    assert sum(st.makespan is not None for st in res[0]) > 0
+
+
+def test_greedy_remap_deterministic_and_complete():
+    nets = _nets()
+    sol = _solution_using(nets, pid=2)
+    placed = decode_solution(sol, nets)
+    survivors = [0, 1]
+    a = greedy_remap(placed, 2, survivors, load={0: 0.5})
+    b = greedy_remap(placed, 2, survivors, load={0: 0.5})
+    assert a == b
+    owned = {(n, k) for n, pl in enumerate(placed)
+             for k, p in enumerate(pl) if p.processor == 2}
+    assert set(a) == owned
+    assert all(pid in survivors for pid in a.values())
+    with pytest.raises(ValueError):
+        greedy_remap(placed, 2, [])
+
+
+def test_backup_mapping_deterministic_and_excludes_dead():
+    nets = _nets()
+    sol = _solution_using(nets, pid=2)
+    sc = Scenario(name="bm", graphs=tuple(nets), groups=((0, 1), (2,)))
+    an = StaticAnalyzer(sc, PROCS, PROFILER, PAPER_COMM_MODEL)
+    b1, r1 = an.backup_mapping(sol, dead_pid=2)
+    b2, r2 = an.backup_mapping(sol, dead_pid=2)
+    assert r1 == r2
+    assert b1.mapping == b2.mapping
+    assert all(pid != 2 for pid in r1.values())
+    # backup shares partition/priority: only the mapping moved
+    assert b1.partition == sol.partition
+    assert b1.priority == sol.priority
+    placed_b = decode_solution(b1, nets)
+    assert all(p.processor != 2 for pl in placed_b for p in pl)
+
+
+# -- straggler timeout + retry ----------------------------------------------
+
+def test_straggler_retries_are_recorded_and_bounded():
+    nets = _nets()
+    sol = SolutionFactory(nets, num_processors=len(PROCS),
+                          rng=random.Random(0), cut_prob=0.4).random_solution()
+    faults = FaultSpec(straggler_prob=0.5, straggler_shape=0.8, seed=11)
+    pol = RecoveryPolicy(max_retries=2, timeout_factor=3.0, min_timeout=1e-5)
+    rt, _ = _runtime(nets, sol, faults, recovery=pol)
+    with rt:
+        res = rt.run_periodic(GROUPS, PERIODS, num_requests=NR)
+    retries = [e for e in rt.recovery_events if e.kind == "retry"]
+    assert retries, "heavy-tailed stragglers must trip the watchdog"
+    per_task = {}
+    for e in retries:
+        key = (e.detail["request"], e.detail["net"], e.detail["sg"])
+        per_task[key] = max(per_task.get(key, 0), e.detail["attempt"])
+        assert e.detail["total_s"] > e.detail["timeout_s"]
+    assert all(n <= pol.max_retries for n in per_task.values())
+    # exhausted retries run to completion: recovery never drops work the
+    # fault itself would not have dropped
+    for gl in res:
+        for st in gl:
+            assert st.makespan is not None
+
+
+def test_clean_run_with_recovery_has_no_events():
+    nets = _nets()
+    sol = SolutionFactory(nets, num_processors=len(PROCS),
+                          rng=random.Random(0), cut_prob=0.4).random_solution()
+    rt, _ = _runtime(nets, sol, None, recovery=RecoveryPolicy())
+    with rt:
+        res = rt.run_periodic(GROUPS, PERIODS, num_requests=NR)
+    assert rt.recovery_events == []
+    assert all(st.makespan is not None for gl in res for st in gl)
+
+
+# -- robustness objective (analyzer side) ------------------------------------
+
+def test_score_under_faults_reports_clean_vs_faulted():
+    nets = _nets()
+    sc = Scenario(
+        name="suf", graphs=tuple(nets), groups=((0, 1), (2,)),
+        faults=FaultSpec(dropouts=((2, 0.010, None),),
+                         straggler_prob=0.2, straggler_shape=1.5, seed=7))
+    an = StaticAnalyzer(sc, PROCS, PROFILER, PAPER_COMM_MODEL)
+    sol = _solution_using(nets, pid=2)
+    rep = an.score_under_faults(sol, num_requests=NR)
+    for key in ("satisfaction_clean", "satisfaction_faulted", "score_clean",
+                "score_faulted", "dropped_clean", "dropped_faulted",
+                "satisfaction_delta", "score_delta"):
+        assert key in rep
+    assert 0.0 <= rep["satisfaction_clean"] <= 1.0
+    assert 0.0 <= rep["satisfaction_faulted"] <= 1.0
+    # a permanent dropout of a used processor must show up as damage
+    assert rep["dropped_faulted"] > rep["dropped_clean"]
+    assert rep["satisfaction_faulted"] <= rep["satisfaction_clean"]
+
+
+# -- worker hardening (satellite: errors fail the request, not the thread) ---
+
+def _real_worker(collected, event):
+    """A threaded (real-mode) Worker with one stub engine."""
+    class StubEngine:
+        exec_times = {}
+
+        def execute(self, key, inputs=None):
+            if key != "good":
+                raise KeyError(key)
+            return 42
+
+    def on_done(payload, result, quant_t, exec_t):
+        collected.append(result)
+        event.set()
+
+    pool = TensorPool()
+    w = Worker(1, "gpu", {"default": StubEngine()}, pool,
+               SharedBufferTransport(pool), on_done)
+    w.start()
+    return w
+
+
+def _payload(backend="default", engine_key="good"):
+    return {"request": 0, "net": 3, "sg": 1, "dtype": "fp16",
+            "backend": backend, "engine_key": engine_key, "inputs": None,
+            "released": 0.0}
+
+
+def test_unknown_backend_fails_task_not_thread():
+    """Regression: the engine lookup used to sit outside the try block, so
+    an unknown backend key raised in the exec thread's main loop and killed
+    it — stranding the coordinator with a forever-pending future."""
+    collected, event = [], threading.Event()
+    w = _real_worker(collected, event)
+    try:
+        w.submit((0, 0, 1), _payload(backend="no-such-backend"))
+        assert event.wait(5.0), "worker thread died instead of reporting"
+        err = collected[-1]
+        assert isinstance(err, WorkerExecutionError)
+        for frag in ("net=3", "sg=1", "processor 1", "gpu",
+                     "no-such-backend"):
+            assert frag in str(err)
+        assert w.threads_alive()
+        # the worker keeps serving after the failure
+        event.clear()
+        w.submit((0, 0, 2), _payload())
+        assert event.wait(5.0)
+        assert collected[-1] == 42
+    finally:
+        w.stop()
+    assert not w.threads_alive()
+
+
+def test_unloaded_engine_key_fails_task_not_thread():
+    collected, event = [], threading.Event()
+    w = _real_worker(collected, event)
+    try:
+        w.submit((0, 0, 1), _payload(engine_key="never-loaded"))
+        assert event.wait(5.0)
+        err = collected[-1]
+        assert isinstance(err, WorkerExecutionError)
+        assert "net=3" in str(err) and "processor 1" in str(err)
+        assert w.threads_alive()
+    finally:
+        w.stop()
+
+
+def test_staging_error_fails_task_not_thread():
+    collected, event = [], threading.Event()
+    w = _real_worker(collected, event)
+    try:
+        bad = _payload()
+        bad["inputs"] = [(object(), "fp32")]  # unconvertible tensor
+        w.submit((0, 0, 1), bad)
+        assert event.wait(5.0)
+        err = collected[-1]
+        assert isinstance(err, WorkerExecutionError)
+        assert "staging" in str(err)
+        assert w.threads_alive()
+    finally:
+        w.stop()
+
+
+# -- measured-cost guard (satellite: partial/poisoned sample sets) -----------
+
+def test_measured_costs_skips_unusable_samples():
+    nets = _nets()
+    sol = SolutionFactory(nets, num_processors=len(PROCS),
+                          rng=random.Random(0)).random_solution()
+    rt, _ = _runtime(nets, sol, None, recovery=None)
+    with rt:
+        eng = next(iter(rt.workers[0].engines.values()))
+        eng.exec_times["empty"] = []
+        eng.exec_times["poisoned"] = [math.inf, -1.0, 0.0]
+        eng.exec_times["ok"] = [0.5, 0.3, math.nan, 0.4]
+        costs = rt.measured_costs()
+    assert "empty" not in costs and "poisoned" not in costs
+    assert costs["ok"] == 0.3  # nan dropped, slowest-of-3 trimmed, median
+    assert rt.measured_cost_skips == 2

@@ -14,6 +14,7 @@ import pytest
 
 from repro.core import (
     PAPER_COMM_MODEL,
+    FaultSpec,
     Profiler,
     Solution,
     SolutionFactory,
@@ -184,6 +185,44 @@ def test_virtual_clock_event_ordering():
     assert fired == ["a", "b", "c"]
     assert clock.now() == 0.5
     assert clock.pending == 1
+
+
+def test_close_during_injected_fault_names_the_fault():
+    """Closing a virtual runtime whose requests were stranded by an
+    injected dropout must fail the pending futures with an error *naming
+    the fault* — not a bare close sentinel — join every worker thread and
+    drain every queue."""
+    nets = _random_nets()
+    sol = None
+    for seed in range(64):
+        cand = SolutionFactory(nets, num_processors=len(PROCS),
+                               rng=random.Random(seed)).random_solution()
+        if any(p.processor == 2 for pl in decode_solution(cand, nets)
+               for p in pl):
+            sol = cand
+            break
+    assert sol is not None
+    faults = FaultSpec(dropouts=((2, 0.008, None),), seed=3)
+    spec = build_spec(decode_solution(sol, nets), PROCS, PROFILER,
+                      PAPER_COMM_MODEL)
+    rt = PuzzleRuntime(
+        nets, sol, PROCS,
+        config=RuntimeConfig(virtual=True, faults=faults),
+        spec=spec,
+    )
+    states = rt.run_periodic([[0, 1]], [0.004], num_requests=8)
+    stranded = [st for st in states[0] if not st.future.done()]
+    assert stranded, "the dropout must strand at least one request"
+    rt.close()
+    for st in stranded:
+        with pytest.raises(RuntimeError, match=r"processor 2 dropped at "
+                                               r"t=0\.008"):
+            st.future.result(timeout=0)
+    assert not any(w.threads_alive() for w in rt.workers.values())
+    for w in rt.workers.values():
+        assert not w._vstore
+        assert w._queue.empty() and w._exec_queue.empty()
+    rt.close()  # idempotent
 
 
 # -- lifecycle: close(), thread leaks, abandoned requests --------------------
