@@ -430,16 +430,28 @@ def bench_simspeed(args) -> None:
     bat_s, objs_batch = time_population(
         lambda a: a.objectives_batch(generation),
         make_analyzer("fast", "bisect"))
+    # The sharded number is the *raw* 2-process cost: a GA generation sits
+    # below batchsim.SHARD_MIN_LANES (the measured crossover where pickling
+    # lanes across the pool starts paying), so run_batch would normally keep
+    # it in-process. Force-lower the threshold for this timing only, so the
+    # recorded row shows what sharding would actually cost here.
+    import repro.core.batchsim as _batchsim
+
     an_sh = make_analyzer("fast", "bisect")
     an_sh.cfg.batch_workers = 2
-    an_sh.objectives_batch(generation[:4])  # warm the pool + caches
     an_sh2 = make_analyzer("fast", "bisect")
     an_sh2.cfg.batch_workers = 2
-    an_sh2._batch_pool = an_sh._batch_pool  # reuse the live pool
-    shard_s, objs_shard = time_population(
-        lambda a: a.objectives_batch(generation), an_sh2)
-    an_sh2._batch_pool = None
-    an_sh.close()
+    _saved_min = _batchsim.SHARD_MIN_LANES
+    _batchsim.SHARD_MIN_LANES = 0
+    try:
+        an_sh.objectives_batch(generation[:4])  # warm the pool + caches
+        an_sh2._batch_pool = an_sh._batch_pool  # reuse the live pool
+        shard_s, objs_shard = time_population(
+            lambda a: a.objectives_batch(generation), an_sh2)
+    finally:
+        _batchsim.SHARD_MIN_LANES = _saved_min
+        an_sh2._batch_pool = None
+        an_sh.close()
     assert objs_loop == objs_batch == objs_shard, "batch parity violated"
     n = len(generation)
     per_us, bat_us, shard_us = (x / n * 1e6 for x in (per_s, bat_s, shard_s))
@@ -450,13 +462,157 @@ def bench_simspeed(args) -> None:
     emit("simspeed.pop_eval_batch", bat_us,
          f"one lock-step pass;speedup=x{per_us / bat_us:.2f}")
     emit("simspeed.pop_eval_batch_sharded", shard_us,
-         f"2-process shards;speedup=x{per_us / shard_us:.2f}")
+         f"2-process shards (forced below SHARD_MIN_LANES="
+         f"{_saved_min});speedup=x{per_us / shard_us:.2f}")
     record["eval_us_population_per_solution"] = per_us
     record["eval_us_batch"] = best_us
     record["eval_us_batch_inprocess"] = bat_us
     record["eval_us_batch_sharded"] = shard_us
     record["batch_speedup"] = speedup
     record["batch_parity_ok"] = True
+    record["shard_min_lanes"] = _saved_min
+
+    # 6b) compiled (jax) leg, full 6-model scenario: the same generation
+    #     through the jitted jax.lax.while_loop core. First pass pays the
+    #     XLA compile (recorded separately); the warm pass is the
+    #     steady-state GA cost. last_stats is asserted so a silent numpy
+    #     fallback cannot fake the number, and the objective drift vs the
+    #     bit-exact loop is measured and bounded by the documented
+    #     tolerance. On this scenario the per-request event count is large
+    #     and GA cut-count variance makes lanes heterogeneous, so the
+    #     lock-step pass (max-lane iterations × full-width element work)
+    #     does NOT beat the scalar loop — recorded honestly as
+    #     compiled_speedup_full_scenario; the crossover leg below (6c)
+    #     times all three engines on one workload and carries the gated
+    #     compiled_speedup (compiled vs the numpy lock-step tier).
+    try:
+        import jax as _jax  # noqa: F401
+        _have_jax = True
+    except Exception:
+        _have_jax = False
+    if _have_jax:
+        import repro.core.batchsim_compiled as _bsc
+        from repro.core import COMPILED_ABS_TOL, COMPILED_REL_TOL
+
+        an_c = make_analyzer("fast", "bisect")
+        an_c.cfg.batch_engine = "compiled"
+        cold_s, _ = time_population(
+            lambda a: a.objectives_batch(generation), an_c)
+        an_c2 = make_analyzer("fast", "bisect")
+        an_c2.cfg.batch_engine = "compiled"
+        comp_s, objs_comp = time_population(
+            lambda a: a.objectives_batch(generation), an_c2)
+        assert _bsc.last_stats.get("fallback") is False, _bsc.last_stats
+        comp_diff = 0.0
+        for row_a, row_b in zip(objs_loop, objs_comp):
+            for x, y in zip(row_a, row_b):
+                if math.isinf(x) or math.isinf(y):
+                    assert math.isinf(x) and math.isinf(y), "inf mismatch"
+                    continue
+                comp_diff = max(comp_diff, abs(x - y))
+                assert abs(x - y) <= (
+                    COMPILED_ABS_TOL
+                    + COMPILED_REL_TOL * max(abs(x), abs(y))
+                ), "compiled tolerance violated"
+        comp_us = comp_s / n * 1e6
+        comp_speedup = per_us / comp_us
+        emit("simspeed.pop_eval_batch_compiled", comp_us,
+             f"jitted while_loop;speedup=x{comp_speedup:.2f};"
+             f"max_diff={comp_diff:.3e};compile_s={cold_s - comp_s:.2f}")
+        record["eval_us_batch_compiled"] = comp_us
+        record["compiled_speedup_full_scenario"] = comp_speedup
+        record["compiled_max_diff"] = comp_diff
+        record["compiled_cold_compile_s"] = cold_s - comp_s
+        record["eval_us_batch"] = min(best_us, comp_us)
+
+        # 6c) compiled crossover leg: a compact 2-group scenario at GA
+        #     width (80 lanes, measured noise + dispatch, 20 requests),
+        #     timed through all three batch-capable paths on identical
+        #     lanes. The gated compiled_speedup is compiled vs the numpy
+        #     lock-step tier it replaces on the batch path (>1 everywhere
+        #     measured, ~2.5-3x here). The scalar-loop comparison is
+        #     recorded separately as compiled_speedup_vs_scalar and is < 1
+        #     on this CPU: FastSimulator handles an event in ~0.75 µs of
+        #     python while the compiled core's masked full-width iteration
+        #     has a ~2 µs/lane floor at ~1.5 events per iteration — which
+        #     is the measured crossover, and why the scalar loop (not any
+        #     batch tier) remains the default CPU evaluation path.
+        from repro.core import (
+            BatchLane,
+            BatchSimulator,
+            FastSimulator,
+            NoiseModel,
+            SolutionFactory,
+            build_spec,
+            chain_graph,
+        )
+        from repro.core.batchsim_compiled import run_batch_compiled
+
+        procs_x, prof_x = _profiler()
+        nets_x = [
+            chain_graph("m0", [("conv", 6e6, 2500, 7500)] * 3),
+            chain_graph("m1", [("conv", 9e6, 3000, 9000)] * 4),
+            chain_graph("m2", [("fc", 4e6, 2000, 5000)] * 3),
+            chain_graph("m3", [("conv", 7e6, 2800, 8000)] * 3),
+        ]
+        groups_x = [[0, 1], [2, 3]]
+        periods_x = (0.033, 0.05)
+        fac_x = SolutionFactory(nets_x, num_processors=len(procs_x),
+                                rng=_random.Random(9), cut_prob=0.3)
+        lanes_x = []
+        for i in range(80):
+            spec_x = build_spec(decode_solution(fac_x.random_solution(),
+                                                nets_x),
+                                procs_x, prof_x, PAPER_COMM_MODEL)
+            lanes_x.append(BatchLane(
+                spec=spec_x, periods=periods_x, num_requests=20,
+                noise=NoiseModel(seed=i), dispatch_overhead=150e-6))
+        run_batch_compiled(lanes_x, groups_x, procs_x)  # pay the compile
+        gc.collect()
+        t0 = time.perf_counter()
+        res_x = run_batch_compiled(lanes_x, groups_x, procs_x)
+        comp_x_s = time.perf_counter() - t0
+        assert res_x is not None, _bsc.last_stats
+        assert _bsc.last_stats.get("fallback") is False, _bsc.last_stats
+        t0 = time.perf_counter()
+        fast_x = [
+            FastSimulator(ln.spec, groups=groups_x, periods=ln.periods,
+                          num_requests=ln.num_requests, noise=ln.noise,
+                          dispatch_overhead=ln.dispatch_overhead).run()
+            for ln in lanes_x
+        ]
+        scal_x_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        BatchSimulator(lanes_x, groups_x, procs_x).run()
+        np_x_s = time.perf_counter() - t0
+        diff_x = 0.0
+        for i, fr in enumerate(fast_x):
+            for a, b in zip([q.makespan for q in fr.requests],
+                            [q.makespan for q in res_x.result(i).requests]):
+                if math.isinf(a) or math.isinf(b):
+                    assert math.isinf(a) and math.isinf(b), "inf mismatch"
+                    continue
+                diff_x = max(diff_x, abs(a - b))
+                assert abs(a - b) <= (
+                    COMPILED_ABS_TOL + COMPILED_REL_TOL * max(abs(a), abs(b))
+                ), "compiled tolerance violated"
+        emit("simspeed.compiled_crossover", comp_x_s / 80 * 1e6,
+             f"compact 2-group scenario;scalar_us="
+             f"{scal_x_s / 80 * 1e6:.0f};numpy_us={np_x_s / 80 * 1e6:.0f};"
+             f"vs_numpy=x{np_x_s / comp_x_s:.2f};"
+             f"vs_scalar=x{scal_x_s / comp_x_s:.2f};"
+             f"max_diff={diff_x:.3e}")
+        record["compiled_speedup"] = np_x_s / comp_x_s
+        record["compiled_speedup_vs_scalar"] = scal_x_s / comp_x_s
+        record["compiled_crossover_us_scalar"] = scal_x_s / 80 * 1e6
+        record["compiled_crossover_us_compiled"] = comp_x_s / 80 * 1e6
+        record["compiled_crossover_us_numpy"] = np_x_s / 80 * 1e6
+    else:
+        emit("simspeed.pop_eval_batch_compiled", 0.0, "jax unavailable")
+        record["eval_us_batch_compiled"] = None
+        record["compiled_speedup"] = None
+        record["compiled_speedup_full_scenario"] = None
+        record["compiled_max_diff"] = None
 
     # batched population α*-search over a candidate set (Pareto-front shape)
     sat_cands = parents[:8]
@@ -475,12 +631,16 @@ def bench_simspeed(args) -> None:
     record["alpha_star_us_population_per_solution"] = sat_per_s / 8 * 1e6
     record["alpha_star_us_population_batch"] = sat_bat_s / 8 * 1e6
     record["batch_notes"] = (
-        "batchsim is bit-identical to the per-solution fast path (asserted "
-        "above and by the differential property suite); on this CPU the "
-        "lock-step SIMD pass amortizes numpy dispatch but each event still "
-        "touches ~30 scalars, so per-solution python remains competitive "
-        "at GA widths - see ARCHITECTURE.md (engines) for the measured "
-        "crossover analysis")
+        "numpy batchsim is bit-identical to the per-solution fast path "
+        "(asserted above and by the differential property suite) but each "
+        "lock-step event still touches ~30 scalars, so per-solution python "
+        "remains competitive at GA widths; the compiled (jax) leg fuses the "
+        "whole frontier advance into one jitted while_loop and beats the "
+        "numpy lock-step tier ~2.5-3x on every measured workload, but the "
+        "scalar loop keeps a ~0.75 us/event floor the full-width masked "
+        "iteration cannot undercut on CPU, so the scalar path stays the "
+        "default and compiled is the opt-in batch backend - see "
+        "ARCHITECTURE.md (engines) for the measured crossover analysis")
 
     if getattr(args, "json", False):
         record["timestamp"] = time.time()

@@ -8,11 +8,17 @@ from .arrivals import (
 )
 from .baselines import best_mapping_solutions, npu_only_solution
 from .batchsim import (
+    SHARD_MIN_LANES,
     BatchLane,
     BatchResult,
     BatchSimulator,
     batch_objectives,
     run_batch,
+)
+from .batchsim_compiled import (
+    COMPILED_ABS_TOL,
+    COMPILED_REL_TOL,
+    run_batch_compiled,
 )
 from .chromosome import (
     BACKENDS,

@@ -68,8 +68,18 @@ class AnalyzerConfig:
     # shards batch lanes across a persistent process pool (1 = in-process
     # single lock-step pass). Results are bit-identical for any value. The
     # GA routes its generation evaluations through the batch path when
-    # ``ga.batch_eval`` is set.
+    # ``ga.batch_eval`` is set. Sharding only engages above
+    # ``batchsim.SHARD_MIN_LANES`` lanes (measured crossover; below it the
+    # in-process pass is faster — see BENCH_simspeed.json).
     batch_workers: int = 1
+    # Lock-step batch backend: "numpy" (bit-exact, the parity tier) or
+    # "compiled" (jitted jax.lax.while_loop core, documented float
+    # tolerance, falls back to numpy when unsupported — see
+    # repro.core.batchsim_compiled). Opt-in: the default stays "numpy"
+    # because every batched entry point is contractually bit-identical to
+    # its scalar counterpart (tests/test_ga_determinism.py,
+    # tests/test_experiments.py); "compiled" trades that for throughput.
+    batch_engine: str = "numpy"
     # Device-in-the-loop measurement rounds (used when the analyzer holds
     # executables and ga.device_in_loop_interval > 0): how many of the
     # front's candidates are executed for real per round, and with how many
@@ -133,6 +143,7 @@ class StaticAnalyzer:
         # decode to the same placed configuration share evaluation results.
         self._objective_cache: "OrderedDict[Tuple, Tuple[float, ...]]" = OrderedDict()
         self.objective_cache_hits = 0
+        self.objective_cache_misses = 0
         # invalid/absent samples skipped by the last apply_measured_costs
         self.measured_skips = 0
         self._batch_pool = None  # lazy ProcessPoolExecutor (batch_workers > 1)
@@ -262,7 +273,13 @@ class StaticAnalyzer:
             hit = self._objective_cache.get(key)
             if hit is not None:
                 self.objective_cache_hits += 1
+                # LRU semantics: a hit must refresh recency (like the spec
+                # cache above) or eviction degrades to insertion order and
+                # the incumbent Pareto front — re-scored every generation —
+                # is exactly what gets evicted once the cache fills.
+                self._objective_cache.move_to_end(key)
                 return hit
+            self.objective_cache_misses += 1
         res = self.simulate(
             solution, alpha, num_requests, measured=measured, engine=engine,
             collect_tasks=False,
@@ -288,6 +305,7 @@ class StaticAnalyzer:
         alpha: Optional[float] = None,
         num_requests: Optional[int] = None,
         measured: bool = False,
+        engine: Optional[str] = None,
     ) -> List[Tuple[float, ...]]:
         """GA objectives for a whole generation in one batched pass.
 
@@ -295,9 +313,12 @@ class StaticAnalyzer:
         cache as :meth:`objectives`, builds one padded struct-of-arrays
         batch for the misses and runs them through the lock-step
         :class:`~repro.core.batchsim.BatchSimulator` (sharded across
-        ``cfg.batch_workers`` processes when configured). Per-solution
-        results are bit-identical to calling :meth:`objectives` in a loop —
-        enforced by the differential property suite.
+        ``cfg.batch_workers`` processes when configured). With the default
+        ``engine="numpy"`` (or ``cfg.batch_engine``), per-solution results
+        are bit-identical to calling :meth:`objectives` in a loop —
+        enforced by the differential property suite. ``engine="compiled"``
+        routes the misses through the jitted lock-step core instead
+        (documented float tolerance, see ``repro.core.batchsim_compiled``).
         """
         alpha = alpha if alpha is not None else self.cfg.search_alpha
         num_requests = num_requests or self.cfg.fast_requests
@@ -309,8 +330,19 @@ class StaticAnalyzer:
         lane_of_key: Dict[Tuple, int] = {}
         lanes: List[BatchLane] = []
         for sol, key in zip(solutions, keys):
-            if key in self._objective_cache or key in lane_of_key:
+            if key in self._objective_cache:
+                # count + refresh exactly like the scalar path's hit, so
+                # batch-mode hit rates are honest and the LRU eviction
+                # order stays identical to calling objectives() in a loop
+                self.objective_cache_hits += 1
+                self._objective_cache.move_to_end(key)
                 continue
+            if key in lane_of_key:
+                # in-generation duplicate: the scalar loop's second call
+                # would hit the cache, so report it as a hit here too
+                self.objective_cache_hits += 1
+                continue
+            self.objective_cache_misses += 1
             lane_of_key[key] = len(lanes)
             lanes.append(self._lane(sol, alpha, num_requests, measured))
         fresh: List[Tuple[float, ...]] = []
@@ -318,6 +350,7 @@ class StaticAnalyzer:
             result = run_batch(
                 lanes, self.scenario.groups, self.processors,
                 workers=self.cfg.batch_workers, pool=self._pool(),
+                engine=engine or self.cfg.batch_engine,
             )
             fresh = batch_objectives(result)
             for key, lane_ix in lane_of_key.items():
@@ -327,7 +360,12 @@ class StaticAnalyzer:
         out: List[Tuple[float, ...]] = []
         for sol, key in zip(solutions, keys):
             hit = self._objective_cache.get(key)
-            if hit is None:
+            if hit is not None:
+                # recency refresh only (hits/misses were accounted in the
+                # dedup pass): the final LRU order matches the scalar
+                # loop's last-access order over ``solutions``
+                self._objective_cache.move_to_end(key)
+            else:
                 # a generation larger than the cache bound evicted this key
                 # before read-back: take the batch value directly when it
                 # was computed this call, else the scalar path.
@@ -393,6 +431,7 @@ class StaticAnalyzer:
         return run_batch(
             lanes, self.scenario.groups, self.processors,
             workers=self.cfg.batch_workers, pool=self._pool(),
+            engine=self.cfg.batch_engine,
         )
 
     def score_batch(
@@ -425,6 +464,7 @@ class StaticAnalyzer:
         result = run_batch(
             lanes, self.scenario.groups, self.processors,
             workers=self.cfg.batch_workers, pool=self._pool(),
+            engine=self.cfg.batch_engine,
         )
         num_groups = self.scenario.num_groups
         lane_scores: List[float] = []
@@ -757,12 +797,16 @@ class StaticAnalyzer:
             ),
             # Whole-generation evaluation through the lock-step batch engine
             # (used when ga.batch_eval is set); bit-identical to the
-            # per-child loop.
+            # per-child loop with the numpy backend. ga.batch_eval may also
+            # name the backend ("compiled" = the jitted core, documented
+            # float tolerance instead of bit-exactness).
             evaluate_batch=lambda sols, accurate: self.objectives_batch(
                 sols,
                 num_requests=(self.cfg.accurate_requests if accurate
                               else self.cfg.fast_requests),
                 measured=accurate,
+                engine=(self.cfg.ga.batch_eval
+                        if isinstance(self.cfg.ga.batch_eval, str) else None),
             ),
             config=self.cfg.ga,
             # Device-in-the-loop measurement rounds (only when this analyzer

@@ -42,10 +42,17 @@ in ``BENCH_simspeed.json``. Population-level throughput beyond that comes
 from the pipeline around the pass — generation dedup against the objective
 cache, one shared noise table per seed, vectorized objective extraction —
 and from sharding lanes across a process pool (``workers > 1``), each shard
-running its own lock-step pass. A ``jax.vmap`` port of the pass was probed
-and rejected: XLA's scatter-heavy while-loop body costs about the same per
-iteration as numpy on CPU, and CPU SIMD cannot beat the ~30-element touch
-set of a single event (see ARCHITECTURE.md §engines).
+running its own lock-step pass; sharding only engages at
+``SHARD_MIN_LANES`` lanes and above — below that the fork/pickle round trip
+costs more than it saves. A jitted ``jax.lax.while_loop`` port of this pass
+exists as the opt-in ``engine="compiled"`` backend
+(:mod:`repro.core.batchsim_compiled`): it beats this numpy tier ~2.5-3.7x
+on every measured workload but *not* the per-solution scalar loop on CPU —
+XLA's full-width masked iteration has a ~2 µs/lane-iter floor while the
+python event loop handles an event in ~0.75 µs, and lock-step pays for the
+longest lane, not the mean. The measured crossover is recorded in
+``BENCH_simspeed.json`` and ARCHITECTURE.md §engines; the bit-exact numpy
+path therefore stays the default.
 """
 from __future__ import annotations
 
@@ -732,6 +739,17 @@ def batch_objectives(
 
 # -- process-pool sharding ---------------------------------------------------
 
+#: Minimum lane count before ``run_batch`` actually shards across worker
+#: processes. Below this width the in-process lock-step pass wins: at GA
+#: widths (~80 lanes) the measured sharded path is *slower* than in-process
+#: (BENCH_simspeed.json: ``eval_us_batch_sharded`` 6053 vs
+#: ``eval_us_batch_inprocess`` 4062 µs — pickling lanes + stitching results
+#: costs more than the pass itself), so ``batch_workers > 1`` silently fell
+#: into a regression. The threshold is recorded alongside both measurements
+#: in the simspeed section; pass ``shard_min_lanes=0`` to force sharding.
+SHARD_MIN_LANES = 256
+
+
 def _run_shard(args) -> Tuple:
     """Worker entry: run one lock-step pass over a shard of lanes."""
     lanes, groups, processors, collect_tasks = args
@@ -749,15 +767,36 @@ def run_batch(
     collect_tasks: bool = False,
     workers: int = 1,
     pool=None,
+    engine: str = "numpy",
+    shard_min_lanes: Optional[int] = None,
 ) -> BatchResult:
     """Run a batch, optionally sharded across a process pool.
 
     Lanes are independent, so sharding changes wall-clock only — every
     lane's result is bit-identical for any ``workers``. ``pool`` may supply
     a live ``ProcessPoolExecutor`` to amortize startup across calls;
-    otherwise one is created per call when ``workers > 1``.
+    otherwise one is created per call when ``workers > 1``. Sharding only
+    engages at ``shard_min_lanes`` (default :data:`SHARD_MIN_LANES`) lanes
+    and up — below the measured crossover the in-process pass is faster.
+
+    ``engine`` selects the lock-step backend: ``"numpy"`` (default, the
+    bit-exact parity tier) or ``"compiled"`` (the jitted
+    ``jax.lax.while_loop`` core from :mod:`repro.core.batchsim_compiled`,
+    documented float tolerance). The compiled backend runs in-process and
+    transparently falls back to numpy when a lane needs features it does
+    not support (``collect_tasks``) or its fixed queue capacity overflows.
     """
-    if workers <= 1 or len(lanes) < 2 * workers:
+    if engine == "compiled" and not collect_tasks:
+        from .batchsim_compiled import run_batch_compiled
+
+        res = run_batch_compiled(lanes, groups, processors)
+        if res is not None:
+            return res
+        # unsupported shape or capacity overflow: bit-exact numpy fallback
+    elif engine not in ("numpy", "compiled"):
+        raise ValueError(f"unknown batch engine {engine!r}")
+    min_lanes = SHARD_MIN_LANES if shard_min_lanes is None else shard_min_lanes
+    if workers <= 1 or len(lanes) < max(2 * workers, min_lanes):
         return BatchSimulator(lanes, groups, processors).run(
             collect_tasks=collect_tasks)
     from concurrent.futures import ProcessPoolExecutor

@@ -45,10 +45,15 @@ class GAConfig:
     vectorized_nsga: bool = True
     # Route whole-generation evaluations (offspring fast evals + front-0
     # accurate re-evals) through the scheduler's batch evaluator instead of
-    # the per-child loop. Fitness values are identical either way (the batch
-    # engine is bit-exact; enforced by tests/test_ga_determinism.py); only
-    # wall-clock and the evaluation counter's cache interleaving differ.
-    batch_eval: bool = False
+    # the per-child loop. True selects the numpy lock-step engine: fitness
+    # values are identical either way (it is bit-exact; enforced by
+    # tests/test_ga_determinism.py); only wall-clock and the evaluation
+    # counter's cache interleaving differ. The string "compiled" selects
+    # the jitted jax.lax.while_loop core instead — much faster at GA
+    # widths (BENCH_simspeed.json -> compiled_speedup) under a documented
+    # float tolerance rather than bit-exactness, so search trajectories
+    # may diverge from the scalar path after many generations.
+    batch_eval: "bool | str" = False
     # Device-in-the-loop feedback (paper §4.2/§5): every N generations the
     # scheduler hands the current Pareto front to ``measure_device``, which
     # executes candidates on the real runtime, writes measured per-subgraph

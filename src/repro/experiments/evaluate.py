@@ -81,6 +81,11 @@ class SweepConfig:
     # default stays off — see BENCH_simspeed.json's batch section.
     use_batch: bool = False
     batch_workers: int = 1
+    # Batched-engine selection: "numpy" (bit-exact lock-step) or "compiled"
+    # (jitted jax.lax.while_loop core; documented float tolerance, falls
+    # back to numpy transparently when jax is unavailable or the workload
+    # is unsupported). See repro.core.batchsim_compiled.
+    batch_engine: str = "numpy"
     # Device-in-the-loop conformance: after picking Puzzle's best schedule,
     # execute it on the virtual-clock PuzzleRuntime and diff the task trace
     # against the simulator at zero tolerance; the scalar diff summary lands
@@ -259,6 +264,7 @@ def evaluate_scenario(
             engine=config.engine,
             saturation_mode=config.saturation_mode,
             batch_workers=config.batch_workers,
+            batch_engine=config.batch_engine,
             ga=GAConfig(
                 pop_size=config.pop_size,
                 max_generations=config.max_generations,

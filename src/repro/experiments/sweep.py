@@ -275,6 +275,13 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                          "see BENCH_simspeed.json for when it pays)")
     ap.add_argument("--batch-workers", type=int, default=1,
                     help="process shards per batched pass (with --use-batch)")
+    ap.add_argument("--batch-engine", default="numpy",
+                    choices=["numpy", "compiled"],
+                    help="batched-pass engine (with --use-batch): 'numpy' "
+                         "is bit-exact; 'compiled' runs the jitted "
+                         "lock-step core (documented float tolerance, "
+                         "transparent numpy fallback; see "
+                         "BENCH_simspeed.json for the measured speedup)")
     ap.add_argument("--validate-runtime", action="store_true",
                     help="replay each scenario's best Puzzle schedule on the "
                          "virtual-clock PuzzleRuntime and record the "
@@ -318,6 +325,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         bm_max_evals=args.bm_evals,
         use_batch=args.use_batch,
         batch_workers=args.batch_workers,
+        batch_engine=args.batch_engine,
         validate_runtime=args.validate_runtime,
     )
     run_dir = args.run_dir or (

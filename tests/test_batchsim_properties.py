@@ -10,6 +10,9 @@ whether real hypothesis is installed), and
 arrival specs (jittered / Poisson / trace) replayed through all **four**
 tiers including the virtual-clock PuzzleRuntime; the ``@given`` tests add
 shrinking and deeper generation when hypothesis is installed.
+``test_compiled_tier_differential_spot_check`` extends the differential to
+the opt-in compiled (jax) tier, which is tolerance-bounded rather than
+bit-exact; its exhaustive suite is ``tests/test_batchsim_compiled.py``.
 
 Also holds the genetic-operator invariants the engines rely on: UPMX keeps
 priorities a permutation, mutation keeps every gene in range.
@@ -360,3 +363,69 @@ def test_property_crossover_mutation_invariants(seed):
     check(m)
     # mutation copies: the parent is untouched
     check(c1)
+
+
+def test_compiled_tier_differential_spot_check():
+    """Opt-in compiled tier vs fastsim vs numpy batch on randomized cases
+    (arrivals + noise + dispatch tokens + a fault ensemble), within the
+    compiled tier's documented tolerance — observed diff is exactly 0.0.
+    The exhaustive compiled suite (all golden traces, fallback contract)
+    lives in tests/test_batchsim_compiled.py."""
+    import pytest
+
+    pytest.importorskip("jax")
+    import repro.core.batchsim_compiled as bsc
+    from repro.core import (
+        COMPILED_ABS_TOL,
+        COMPILED_REL_TOL,
+        FaultSpec,
+        run_batch_compiled,
+    )
+
+    def close(a, b):
+        if math.isinf(a) or math.isinf(b):
+            return math.isinf(a) and math.isinf(b)
+        return abs(a - b) <= COMPILED_ABS_TOL + COMPILED_REL_TOL * max(
+            abs(a), abs(b))
+
+    for seed, faulted in ((0xC0119, False), (0xC011A, True)):
+        rng = random.Random(seed)
+        nets, groups, periods = _random_problem(rng)
+        fac = SolutionFactory(nets, num_processors=len(PROCS),
+                              rng=random.Random(seed + 1), cut_prob=0.3)
+        lanes = []
+        for i in range(3):
+            spec = build_spec(decode_solution(fac.random_solution(), nets),
+                              PROCS, PROFILER, PAPER_COMM_MODEL)
+            nr = rng.randint(3, 6)
+            faults = FaultSpec(
+                dropouts=((rng.randrange(len(PROCS)), 0.0, 0.004),),
+                straggler_prob=0.3, straggler_shape=1.5,
+                seed=rng.randrange(1 << 16),
+            ) if faulted else None
+            lanes.append(BatchLane(
+                spec=spec, periods=periods, num_requests=nr,
+                noise=NoiseModel(seed=rng.randrange(1 << 16)),
+                dispatch_overhead=150e-6,
+                arrivals=_random_arrival(rng, groups, periods, nr),
+                faults=faults))
+        comp = run_batch_compiled(lanes, groups, PROCS)
+        assert comp is not None and bsc.last_stats["fallback"] is False
+        ref = BatchSimulator(lanes, groups, PROCS).run()
+        for i, lane in enumerate(lanes):
+            fast = FastSimulator(
+                lane.spec, groups=groups, periods=lane.periods,
+                num_requests=lane.num_requests, noise=lane.noise,
+                dispatch_overhead=lane.dispatch_overhead,
+                arrivals=lane.arrivals, faults=lane.faults,
+            ).run()
+            for tier in (ref.result(i), fast):
+                cr = comp.result(i)
+                assert len(tier.requests) == len(cr.requests)
+                for qa, qb in zip(tier.requests, cr.requests):
+                    assert qa.done_tasks == qb.done_tasks
+                    assert close(qa.makespan, qb.makespan)
+                    assert close(qa.first_start, qb.first_start)
+                    assert close(qa.last_finish, qb.last_finish)
+                for pid in tier.busy_time:
+                    assert close(tier.busy_time[pid], cr.busy_time[pid])

@@ -1,6 +1,6 @@
 """Regression tests for the hot-path bugfix sweep.
 
-Three long-standing bugs, each with a test that fails on the pre-fix code:
+Long-standing bugs, each with a test that fails on the pre-fix code:
 
 * **GA mating** (``ga.py``): with an odd ``pop_size``,
   ``zip(parents[0::2], parents[1::2])`` silently dropped the last shuffled
@@ -12,6 +12,15 @@ Three long-standing bugs, each with a test that fails on the pre-fix code:
 * **Best Mapping frontier** (``core/baselines.py``): keys whose archive
   entries got dominated stayed in the hillclimb frontier, burning the
   evaluation budget expanding dead mappings.
+* **Objective-cache LRU** (``core/analyzer.py``): ``objectives`` cache hits
+  never refreshed recency, so the "LRU" evicted by insertion order — the
+  incumbent Pareto front, re-scored every generation, was exactly what got
+  evicted under pressure; ``objectives_batch`` hits were neither counted
+  nor refreshed, so batch-mode stats undercounted and eviction order
+  diverged from the scalar path.
+* **Batch sharding** (``core/batchsim.py``): the sharded path measured
+  *slower* than in-process at GA widths, yet ``workers > 1`` always
+  sharded; ``run_batch`` now stays in-process below ``SHARD_MIN_LANES``.
 """
 import random
 
@@ -19,14 +28,20 @@ import numpy as np
 import pytest
 
 from repro.core import (
+    PAPER_COMM_MODEL,
+    SHARD_MIN_LANES,
     AnalyzerConfig,
     GAConfig,
     GeneticScheduler,
+    Profiler,
     SolutionFactory,
     StaticAnalyzer,
     build_scenario,
     chain_graph,
+    mobile_processors,
+    run_batch,
 )
+from repro.core.profiler import AnalyticMobileBackend
 from repro.core.baselines import _whole_model_solution, best_mapping_solutions
 from repro.core.nsga import fast_non_dominated_sort
 from repro.experiments import generate_scenario_specs
@@ -313,3 +328,112 @@ def test_best_mapping_unchanged_or_better_on_committed_seeds(index):
         # this scenario's pre-fix run provably wasted budget: the fixed
         # archive strictly dominates several of its entries
         assert any(any(dominates(f, p) for f in fixed) for p in pre)
+
+
+# -- Objective cache: LRU recency -----------------------------------------
+
+
+def _cache_analyzer(cache_size=1):
+    """Analyzer with a tiny objective cache (cap = 4 * cache_size)."""
+    nets = [chain_graph(f"n{i}", [("conv", (2 + i) * 1e6, 500, 2000)] * 3)
+            for i in range(2)]
+    scen = build_scenario("lru", [["n0", "n1"]], {g.name: g for g in nets})
+    procs = mobile_processors()
+    prof = Profiler(AnalyticMobileBackend(procs))
+    cfg = AnalyzerConfig(decode_cache_size=cache_size, ga=GAConfig(seed=5))
+    return StaticAnalyzer(scen, procs, prof, PAPER_COMM_MODEL, cfg)
+
+
+def _distinct_solutions(an, n):
+    """Solutions with pairwise-distinct spec signatures (distinct memo keys)."""
+    an.factory.rng = random.Random(11)
+    sols, seen = [], set()
+    while len(sols) < n:
+        s = an.factory.random_solution()
+        sig = an.solution_spec(s).signature()
+        if sig not in seen:
+            seen.add(sig)
+            sols.append(s)
+    return sols
+
+
+def test_objective_cache_hot_key_survives_eviction():
+    """A repeatedly-hit key must outlive colder insertions.
+
+    Pre-fix, ``objectives`` hits never called ``move_to_end``, so eviction
+    degraded to insertion order: the oldest-inserted key was evicted even
+    while being hit every generation — exactly the incumbent Pareto front's
+    access pattern.
+    """
+    an = _cache_analyzer()  # objective cache cap = 4
+    sol_a, sol_b, sol_c, sol_d, sol_e = _distinct_solutions(an, 5)
+    for s in (sol_a, sol_b, sol_c, sol_d):
+        an.objectives(s)               # 4 misses: cache exactly full
+    assert an.objective_cache_misses == 4
+    an.objectives(sol_a)               # hit: must refresh recency
+    assert an.objective_cache_hits == 1
+    an.objectives(sol_e)               # evicts the true LRU (B) — not A
+    misses = an.objective_cache_misses
+    an.objectives(sol_a)
+    assert an.objective_cache_hits == 2, (
+        "hot key evicted: cache degraded to insertion order")
+    assert an.objective_cache_misses == misses
+
+
+def test_objectives_batch_hit_accounting_and_recency():
+    """Batch dedup/read-back hits count and refresh like the scalar path."""
+    an = _cache_analyzer()
+    sol_a, sol_b, sol_c, sol_d, sol_e = _distinct_solutions(an, 5)
+    an.objectives(sol_a)
+    assert (an.objective_cache_hits, an.objective_cache_misses) == (0, 1)
+    out = an.objectives_batch([sol_a, sol_b])   # A: cached; B: fresh lane
+    assert an.objective_cache_hits == 1, "batch cache hit went uncounted"
+    assert an.objective_cache_misses == 2
+    assert out[0] == an.objectives(sol_a)       # agrees with scalar path
+    # recency through the batch path only: fill the cap, touch A via a
+    # pure-hit batch, then force one eviction — A must survive it
+    an.objectives_batch([sol_c, sol_d])         # cache now {A,B,C,D} (cap 4)
+    an.objectives_batch([sol_a])
+    hits = an.objective_cache_hits
+    an.objectives(sol_e)                        # evicts true LRU (B)
+    an.objectives(sol_a)
+    assert an.objective_cache_hits == hits + 1, (
+        "batch hit did not refresh LRU recency")
+
+
+def test_objectives_batch_duplicate_counts_as_hit():
+    """An in-generation duplicate is a hit (the scalar loop's second call
+    would hit the cache) and must not be simulated twice."""
+    an = _cache_analyzer(cache_size=64)
+    sol_a, sol_b = _distinct_solutions(an, 2)
+    out = an.objectives_batch([sol_a, sol_b, sol_a.copy()])
+    assert an.objective_cache_misses == 2
+    assert an.objective_cache_hits == 1
+    assert out[0] == out[2]
+
+
+# -- run_batch: sharding threshold ----------------------------------------
+
+
+class _PoisonPool:
+    """Stands in for a process pool that must not be used."""
+
+    def map(self, *a, **k):  # pragma: no cover - failure path
+        raise AssertionError("sharded below the measured lane threshold")
+
+
+def test_run_batch_small_batch_stays_in_process():
+    """Below SHARD_MIN_LANES, workers > 1 must not engage the (measured
+    slower) sharded path; an explicit threshold override re-enables it."""
+    an = _cache_analyzer(cache_size=64)
+    sols = _distinct_solutions(an, 6)
+    lanes = [an._lane(s, 1.0, 4, False) for s in sols]
+    assert len(lanes) < SHARD_MIN_LANES
+    res = run_batch(lanes, an.scenario.groups, an.processors,
+                    workers=4, pool=_PoisonPool())
+    ref = run_batch(lanes, an.scenario.groups, an.processors)
+    for i in range(len(lanes)):
+        assert res.makespans(i) == ref.makespans(i)
+    with pytest.raises(AssertionError, match="sharded"):
+        run_batch(lanes, an.scenario.groups, an.processors,
+                  workers=2, pool=_PoisonPool(), shard_min_lanes=0)
