@@ -15,6 +15,14 @@ Prints ``name,us_per_call,derived`` CSV rows. Sections:
              and an end-to-end GA + saturation speedup on a deterministic
              3-group scenario (with a makespan-parity check). ``--json``
              additionally writes BENCH_simspeed.json for regression tracking.
+* prescreen — static pre-screen (repro.analysis): GA simulations avoided
+            by decode-time infeasibility proofs on a memory-constrained
+            scenario, the pruned chromosomes adversarially re-checked by
+            provisioning through a capacity-bounded TensorPool (false
+            prunes must be 0), α*-probe savings from the proven deadline
+            floor, and a front-identity assertion on the unconstrained
+            run. ``--json`` writes BENCH_prescreen.json (CI gates
+            ``prescreen_false_prunes == 0``).
 * conformance — device-in-the-loop tier: replays schedules on the
             virtual-clock PuzzleRuntime and diffs task traces against the
             FastSimulator at zero tolerance (asserted), reporting µs/replay
@@ -54,9 +62,8 @@ import json
 import math
 import os
 import statistics
-import sys
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Tuple
 
 import numpy as np
 
@@ -622,7 +629,7 @@ def bench_simspeed(args) -> None:
     sat_bat_s, sat_batch = time_population(
         lambda a: a.population_saturation(sat_cands),
         make_analyzer("fast", "bisect"))
-    assert [r.alpha_star for r in sat_loop] == \
+    assert [r.alpha_star for r in sat_loop] ==\
         [r.alpha_star for r in sat_batch], "saturation parity violated"
     emit("simspeed.pop_alpha_star_per_solution", sat_per_s / 8 * 1e6,
          "bisect per candidate")
@@ -1001,6 +1008,190 @@ def bench_kernels(args) -> None:
          f"max_err_vs_ref={err:.2e}")
 
 
+def bench_prescreen(args) -> None:
+    """Static pre-screen (repro.analysis): simulations avoided per GA run.
+
+    One deterministic 2-group scenario, twice:
+
+    1. **Unconstrained** — prescreen on vs off must yield bit-identical
+       Pareto fronts and evaluation counts (nothing is provable, so the
+       pre-screen may not perturb the search). Asserted.
+    2. **Memory-constrained** — the NPU gets a tensor-memory budget that
+       many chromosomes provably exceed (SL020): reports how many GA
+       simulations the pre-screen avoided, and adversarially re-checks
+       every pruned chromosome by *actually provisioning* it through a
+       capacity-bounded TensorPool — a prune whose provisioning succeeds
+       would be a soundness bug (``false_prunes``, must be 0; CI gates it).
+
+    Also measures the α*-search probe savings from the proven deadline
+    lower bound (``skip_below``), asserting α* itself is unchanged.
+    ``--json`` writes BENCH_prescreen.json for the CI gate.
+    """
+    import dataclasses
+
+    from repro.analysis import provision_memory
+    from repro.core.graph import chain_graph
+    from repro.core.scenarios import Scenario
+
+    nets = (
+        chain_graph("alpha", [("conv", 4e6, 1000, 4000)] * 4),
+        chain_graph("beta", [("fc", 8e6, 2000, 8000)] * 3),
+        chain_graph("gamma", [("dw", 1.5e6, 600, 1800)] * 5),
+    )
+    scenario = Scenario(name="prescreen_bench", graphs=nets,
+                        groups=((0, 1), (2,)))
+    procs = mobile_processors()
+    profiler = Profiler(AnalyticMobileBackend(procs))
+
+    def make_analyzer(processors, prescreen):
+        return StaticAnalyzer(
+            scenario, processors, profiler, PAPER_COMM_MODEL,
+            AnalyzerConfig(
+                prescreen=prescreen,
+                ga=GAConfig(pop_size=16, max_generations=10,
+                            min_generations=5, seed=7, prescreen=prescreen),
+            ),
+        )
+
+    def front_keys(result):
+        return sorted(s.key() for s in result.pareto)
+
+    # 1. unconstrained: the pre-screen must be a no-op
+    t0 = time.perf_counter()
+    off = make_analyzer(procs, False).run_ga()
+    t_off = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    on = make_analyzer(procs, True).run_ga()
+    t_on = time.perf_counter() - t0
+    fronts_identical = (front_keys(off) == front_keys(on)
+                        and off.evaluations == on.evaluations)
+    assert fronts_identical, "prescreen perturbed an unconstrained GA run"
+    assert on.prescreen_stats["pruned"] == 0
+    emit("prescreen.unconstrained.off", t_off * 1e6,
+         f"evals={off.evaluations}")
+    emit("prescreen.unconstrained.on", t_on * 1e6,
+         f"evals={on.evaluations};checked={on.prescreen_stats['checked']};"
+         f"fronts_identical={fronts_identical}")
+
+    # 2. NPU memory budget below what whole-model-resident schedules need:
+    # chromosomes packing everything onto the NPU provably OOM (SL020)
+    tight_procs = [
+        dataclasses.replace(p, memory_capacity=20480) if p.kind == "npu"
+        else p
+        for p in procs
+    ]
+    t0 = time.perf_counter()
+    c_off = make_analyzer(tight_procs, False).run_ga()
+    tc_off = time.perf_counter() - t0
+    an_c = make_analyzer(tight_procs, True)
+    linter = an_c.linter()
+    pruned_solutions = []
+    orig_prescreen = an_c.prescreen_objectives
+
+    def recording_prescreen(sol):
+        obj = orig_prescreen(sol)
+        if obj is not None:
+            pruned_solutions.append(sol)
+        return obj
+
+    an_c.prescreen_objectives = recording_prescreen
+    t0 = time.perf_counter()
+    c_on = an_c.run_ga()
+    tc_on = time.perf_counter() - t0
+    stats = c_on.prescreen_stats
+    # adversarial ground truth: every pruned chromosome must fail to
+    # provision through a real capacity-bounded TensorPool
+    false_prunes = 0
+    for sol in pruned_solutions:
+        ok = provision_memory(linter.builder.decode(sol),
+                              linter.capacities())
+        if all(ok.values()):
+            false_prunes += 1
+    avoided_fraction = (stats["simulations_avoided"]
+                        / max(1, stats["simulations_avoided"]
+                              + c_on.evaluations))
+    emit("prescreen.constrained.off", tc_off * 1e6,
+         f"evals={c_off.evaluations}")
+    emit("prescreen.constrained.on", tc_on * 1e6,
+         f"evals={c_on.evaluations};pruned={stats['pruned']};"
+         f"checked={stats['checked']}")
+    emit("prescreen.simulations_avoided", 0.0,
+         f"{stats['simulations_avoided']} ({avoided_fraction * 100:.1f}% "
+         f"of GA evaluations)")
+    emit("prescreen.false_prunes", 0.0, f"{false_prunes} (gate: 0)")
+
+    # 3. α*-probe skipping: the proven deadline floor answers probes below
+    # it as 0.0 without simulating. Two regimes: a feasible front solution
+    # (floor below the probe path — searches must be identical), and an
+    # overloaded regime (periods ÷ 8: the CPU seed's floor clears the whole
+    # α lattice, so α* = inf is proven without a single simulation).
+    def count_probes(an, sol):
+        calls = 0
+        orig_score = an.score
+
+        def counting_score(s, alpha, **kw):
+            nonlocal calls
+            calls += 1
+            return orig_score(s, alpha, **kw)
+
+        an.score = counting_score
+        sat = an.saturation(sol)
+        an.score = orig_score
+        return calls, sat.alpha_star
+
+    probe_sol = sorted(off.pareto, key=lambda s: s.key())[0]
+    counts = {}
+    alpha_stars = {}
+    overload = {}
+    for label, prescreen in (("off", False), ("on", True)):
+        an = make_analyzer(procs, prescreen)
+        counts[label], alpha_stars[label] = count_probes(an, probe_sol)
+        an_tight = make_analyzer(procs, prescreen)
+        # overloaded regime: same scenario at 8x the request rate
+        an_tight.base_periods = [p / 8.0 for p in an_tight.base_periods]
+        overload[label] = count_probes(
+            an_tight, an_tight.factory.seeded_solution(0))
+    assert alpha_stars["off"] == alpha_stars["on"],\
+        "probe skipping changed alpha*"
+    assert overload["off"][1] == overload["on"][1] == float("inf")
+    emit("prescreen.alpha_probes.front", 0.0,
+         f"off={counts['off']};on={counts['on']};"
+         f"alpha_star={alpha_stars['on']};identical=True")
+    emit("prescreen.alpha_probes.overloaded", 0.0,
+         f"off={overload['off'][0]};on={overload['on'][0]};"
+         f"alpha_star=inf (proven without simulation)")
+
+    if getattr(args, "json", False):
+        record = {
+            "timestamp": time.time(),
+            "unconstrained": {
+                "evals_off": off.evaluations,
+                "evals_on": on.evaluations,
+                "checked": on.prescreen_stats["checked"],
+                "fronts_identical": fronts_identical,
+            },
+            "constrained": {
+                "evals_off": c_off.evaluations,
+                "evals_on": c_on.evaluations,
+                "prescreen_stats": dict(stats),
+                "prescreen_false_prunes": false_prunes,
+                "simulations_avoided_fraction": avoided_fraction,
+            },
+            "alpha_probes": {
+                "front_off": counts["off"],
+                "front_on": counts["on"],
+                "front_alpha_star": alpha_stars["on"],
+                "overloaded_off": overload["off"][0],
+                "overloaded_on": overload["on"][0],
+            },
+        }
+        out = os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_prescreen.json")
+        with open(os.path.abspath(out), "w") as f:
+            json.dump(record, f, indent=2, sort_keys=True)
+        emit("prescreen.json", 0.0, os.path.abspath(out))
+
+
 SECTIONS = {
     "table2": bench_table2,
     "table3": bench_table3,
@@ -1010,6 +1201,7 @@ SECTIONS = {
     "fig15": bench_fig15,
     "table5": bench_table5,
     "simspeed": bench_simspeed,
+    "prescreen": bench_prescreen,
     "conformance": bench_conformance,
     "sweep": bench_sweep,
     "arrivals": bench_arrivals,

@@ -7,7 +7,7 @@ source citation) and ``smoke_config()`` (2 layers, d_model ≤ 512,
 from __future__ import annotations
 
 import importlib
-from typing import Dict, List
+from typing import Dict
 
 from ..models.config import ModelConfig
 

@@ -15,14 +15,19 @@ from __future__ import annotations
 import math
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple
+
+if TYPE_CHECKING:  # typing-only: core must not import these at runtime
+    from ..analysis import LintReport, ScheduleLinter
+    from ..runtime.conformance import ConformanceReport
+    from .batchsim import BatchResult
 
 from .arrivals import ArrivalSpec
 from .baselines import best_mapping_solutions, npu_only_solution
 from .batchsim import BatchLane, batch_objectives, run_batch
 from .chromosome import Solution, SolutionFactory, decode_solution
 from .comm import PiecewiseLinearCommModel
-from .fastsim import FastSimSpec, FastSimulator, SpecBuilder, build_spec
+from .fastsim import FastSimSpec, FastSimulator, SpecBuilder
 from .faults import FaultSpec
 from .ga import GAConfig, GAResult, GeneticScheduler
 from .processors import Processor
@@ -39,6 +44,12 @@ from .scoring import (
     scenario_score,
 )
 from .simulator import NoiseModel, RuntimeSimulator, SimResult
+
+#: Per-axis fitness assigned to chromosomes the static analyzer proves
+#: infeasible: strictly above the simulator's 1e6 dropped-request cap, so a
+#: pruned chromosome is dominated by (or ties) every simulated one and can
+#: never displace a feasible solution from the front.
+PRESCREEN_OBJECTIVE = 2.0e6
 
 
 @dataclass
@@ -86,6 +97,14 @@ class AnalyzerConfig:
     # requests per group — the paper's "brief on-target execution".
     device_in_loop_topk: int = 1
     device_in_loop_requests: int = 3
+    # Static pre-screening (repro.analysis): when set, the α*-searches skip
+    # lattice probes below the linter's proven infeasibility bound (answered
+    # as score 0.0 without simulating — sound by the SL030 deadline proof),
+    # and run_ga() hands the GA a prescreen callable (which additionally
+    # requires GAConfig.prescreen to engage). Results are unchanged by
+    # construction: only probes the score contract already determines are
+    # skipped, and only proven-infeasible chromosomes are pruned.
+    prescreen: bool = False
 
 
 class StaticAnalyzer:
@@ -126,6 +145,7 @@ class StaticAnalyzer:
                            if self.faults is not None else None)
         self.factory = SolutionFactory(
             scenario.graphs, num_processors=len(processors),
+            processors=processors,
         )
         # Decode + cost cache: a solution is decoded and cost-annotated once
         # (FastSimSpec) and then re-simulated across all α values, request
@@ -147,9 +167,10 @@ class StaticAnalyzer:
         # invalid/absent samples skipped by the last apply_measured_costs
         self.measured_skips = 0
         self._batch_pool = None  # lazy ProcessPoolExecutor (batch_workers > 1)
+        self._linter = None  # lazy ScheduleLinter (prescreen / lint paths)
 
     # -- batch plumbing ------------------------------------------------------
-    def _pool(self):
+    def _pool(self) -> Optional[object]:
         if self.cfg.batch_workers > 1 and self._batch_pool is None:
             from concurrent.futures import ProcessPoolExecutor
             self._batch_pool = ProcessPoolExecutor(
@@ -403,13 +424,49 @@ class StaticAnalyzer:
         alphas: Optional[Sequence[float]] = None,
         mode: Optional[str] = None,
     ) -> SaturationResult:
-        evaluate = lambda a: self.score(solution, a)
+        def evaluate(a: float) -> float:
+            return self.score(solution, a)
+
         if alphas is not None:
             return saturation_multiplier(evaluate, alphas)
         mode = mode or self.cfg.saturation_mode
         if mode == "grid":
             return saturation_multiplier(evaluate)
-        return saturation_multiplier_bisect(evaluate)
+        return saturation_multiplier_bisect(
+            evaluate, skip_below=self.alpha_floor(solution))
+
+    # -- static pre-screen (repro.analysis) -----------------------------------
+    def linter(self) -> "ScheduleLinter":
+        """:class:`~repro.analysis.ScheduleLinter` sharing this analyzer's
+        scenario context and SpecBuilder (lazy; import deferred so the core
+        package never depends on repro.analysis at import time)."""
+        if self._linter is None:
+            from ..analysis import ScheduleLinter
+            self._linter = ScheduleLinter.from_analyzer(self)
+        return self._linter
+
+    def lint(self, solution: Solution,
+             alpha: Optional[float] = None) -> "LintReport":
+        """Static :class:`~repro.analysis.LintReport` for ``solution``."""
+        return self.linter().lint(solution, alpha=alpha)
+
+    def alpha_floor(self, solution: Solution) -> float:
+        """Proven-infeasible α bound for probe skipping (0.0 when the
+        pre-screen is disabled or nothing can be proven)."""
+        if not self.cfg.prescreen:
+            return 0.0
+        return self.linter().alpha_lower_bound(self.solution_spec(solution))
+
+    def prescreen_objectives(
+        self, solution: Solution
+    ) -> Optional[Tuple[float, ...]]:
+        """Sound GA pre-screen: worst-rank objectives when the static
+        analyzer *proves* ``solution`` infeasible, else ``None`` (simulate).
+        """
+        report = self.linter().prescreen_report(solution)
+        if report is None:
+            return None
+        return (PRESCREEN_OBJECTIVE,) * (2 * self.scenario.num_groups)
 
     def simulate_batch(
         self,
@@ -417,7 +474,7 @@ class StaticAnalyzer:
         num_requests: int,
         measured: bool = False,
         seed: int = 0,
-    ):
+    ) -> "BatchResult":
         """Simulate many ``(solution, α)`` pairs in one lock-step batch.
 
         The returned :class:`~repro.core.batchsim.BatchResult` indexes lanes
@@ -506,7 +563,10 @@ class StaticAnalyzer:
                     alphas, scores[ix * len(alphas):(ix + 1) * len(alphas)]))
                 out.append(saturation_multiplier(lambda a: chunk[a]))
             return out
-        gens = [bisect_alpha_probes() for _ in solutions]
+        # same per-solution probe skipping as the scalar path, so the batched
+        # search stays bit-identical to [self.saturation(s) for s in ...]
+        gens = [bisect_alpha_probes(skip_below=self.alpha_floor(s))
+                for s in solutions]
         pending: Dict[int, float] = {}
         results: Dict[int, SaturationResult] = {}
         for ix, gen in enumerate(gens):
@@ -538,7 +598,7 @@ class StaticAnalyzer:
         mode: str = "virtual",
         executables: Optional[Dict] = None,
         rel_tol: float = 0.35,
-    ):
+    ) -> "ConformanceReport":
         """Execute ``solution`` on :class:`~repro.runtime.PuzzleRuntime` and
         diff its task trace against the simulator's prediction.
 
@@ -809,6 +869,9 @@ class StaticAnalyzer:
                         if isinstance(self.cfg.ga.batch_eval, str) else None),
             ),
             config=self.cfg.ga,
+            # Sound static pre-screen: only engages when ga.prescreen is set
+            # (the scheduler drops the callable otherwise).
+            prescreen=self.prescreen_objectives,
             # Device-in-the-loop measurement rounds (only when this analyzer
             # holds real executables): brief on-target execution of the
             # front, ProfileDB write-back, cache invalidation, re-rank.

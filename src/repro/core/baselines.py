@@ -15,9 +15,8 @@ RNG, so every function here is replayable from its arguments alone.
 """
 from __future__ import annotations
 
-import itertools
 import random
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Sequence, Tuple
 
 from .chromosome import Solution
 from .graph import ModelGraph

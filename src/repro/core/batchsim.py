@@ -58,8 +58,8 @@ from __future__ import annotations
 
 import math
 import random
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -187,7 +187,7 @@ class BatchSimulator:
         self.kind_of_pid = {p.pid: p.kind for p in processors}
 
     # -- batch assembly -----------------------------------------------------
-    def _pad_specs(self):
+    def _pad_specs(self) -> None:
         lanes = self.lanes
         W = len(lanes)
         S = max(ln.spec.num_subgraphs for ln in lanes)
@@ -399,7 +399,9 @@ class BatchSimulator:
             nrec[:, :, :QC] = qrec
             qkey, qg, qrr, qrec, QC = nk, ng, nrr, nrec, QC2
 
-        def append_deliver(bi, pid, g, rr, rec, t) -> None:
+        def append_deliver(bi: np.ndarray, pid: np.ndarray, g: np.ndarray,
+                           rr: np.ndarray, rec: Optional[np.ndarray],
+                           t: np.ndarray) -> None:
             """Hand items to (idle, now-busy) workers: push deliver events."""
             idle[bi, pid] = False
             pos = del_n[bi]
@@ -417,7 +419,9 @@ class BatchSimulator:
                 times[we, C - 1] = t[was_empty]
                 seqs[we, C - 1] = del_seq[we, 0]
 
-        def queue_push(bi, pid, key, g, rr, rec) -> None:
+        def queue_push(bi: np.ndarray, pid: np.ndarray, key: np.ndarray,
+                       g: np.ndarray, rr: np.ndarray,
+                       rec: Optional[np.ndarray]) -> None:
             while qn[bi, pid].max() >= QC:
                 grow_queues()
             slot = np.argmax(qkey[bi, pid] == _EMPTY, axis=1)
@@ -428,7 +432,9 @@ class BatchSimulator:
             if rec is not None:
                 qrec[bi, pid, slot] = rec
 
-        def release(bi, g, rr, gid, rid, t) -> None:
+        def release(bi: np.ndarray, g: np.ndarray, rr: np.ndarray,
+                    gid: np.ndarray, rid: np.ndarray,
+                    t: np.ndarray) -> None:
             """Release one task per lane of ``bi`` (reference `release()`)."""
             rec = None
             if collect_tasks:
@@ -476,7 +482,8 @@ class BatchSimulator:
                 queue_push(qi, pid[~is_idle], key, g[~is_idle], rr[~is_idle],
                            rec[~is_idle] if rec is not None else None)
 
-        def pull_next(bi, pid, t) -> None:
+        def pull_next(bi: np.ndarray, pid: np.ndarray,
+                      t: np.ndarray) -> None:
             """Workers that just finished pop their queues or go idle."""
             has = qn[bi, pid] > 0
             hb, hp = bi[has], pid[has]
@@ -494,9 +501,6 @@ class BatchSimulator:
             ib, ip = bi[~has], pid[~has]
             if ib.size:
                 idle[ib, ip] = True
-
-        arange_W = np.arange(W)
-        lane_groups = [np.array(g, np.int64) for g in groups]
 
         while True:
             # -- frontier selection: per-lane earliest (time, seq) event ----
@@ -750,7 +754,7 @@ def batch_objectives(
 SHARD_MIN_LANES = 256
 
 
-def _run_shard(args) -> Tuple:
+def _run_shard(args: Tuple) -> Tuple:
     """Worker entry: run one lock-step pass over a shard of lanes."""
     lanes, groups, processors, collect_tasks = args
     res = BatchSimulator(lanes, groups, processors).run(
@@ -766,7 +770,7 @@ def run_batch(
     processors: Sequence[Processor],
     collect_tasks: bool = False,
     workers: int = 1,
-    pool=None,
+    pool: Optional[object] = None,
     engine: str = "numpy",
     shard_min_lanes: Optional[int] = None,
 ) -> BatchResult:

@@ -69,7 +69,7 @@ from __future__ import annotations
 import math
 import random
 from functools import partial
-from typing import List, Optional, Sequence, Tuple
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -94,7 +94,7 @@ _jax = None
 _jax_failed = False
 
 
-def _get_jax():
+def _get_jax() -> Optional[object]:
     """Lazy jax import; remember a failure so we only try once."""
     global _jax, _jax_failed
     if _jax is None and not _jax_failed:
@@ -114,7 +114,7 @@ def _bucket(n: int, lo: int = 1) -> int:
     return 1 << (v - 1).bit_length()
 
 
-def _advance_factory(jax):
+def _advance_factory(jax: object) -> object:
     """Build the jitted lock-step advance once per process."""
     import jax.numpy as jnp
     from jax import lax
@@ -497,7 +497,7 @@ last_stats: dict = {}
 _advance_cache = None
 
 
-def _advance_fn():
+def _advance_fn() -> Optional[object]:
     global _advance_cache
     if _advance_cache is None:
         jax = _get_jax()

@@ -17,10 +17,11 @@ mutation for the rest.
 from __future__ import annotations
 
 import random
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from .graph import ModelGraph, Subgraph
+from .processors import Processor
 
 # Execution-configuration gene domains. These mirror ORT's (backend, dtype)
 # choices on mobile; on the TPU adaptation they select the kernel
@@ -133,6 +134,7 @@ class SolutionFactory:
         cut_prob: float = 0.15,
         num_dtypes: int = len(DTYPES),
         num_backends: int = len(BACKENDS),
+        processors: Optional[Sequence[Processor]] = None,
     ):
         self.graphs = list(graphs)
         self.num_processors = num_processors
@@ -140,6 +142,9 @@ class SolutionFactory:
         self.cut_prob = cut_prob
         self.num_dtypes = num_dtypes
         self.num_backends = num_backends
+        # optional capability knowledge: lets heuristic seeds avoid pinning
+        # a processor to a (dtype, backend) it cannot execute
+        self.processors = list(processors) if processors is not None else None
 
     # -- creation -----------------------------------------------------------
     def random_solution(self) -> Solution:
@@ -159,7 +164,15 @@ class SolutionFactory:
         return Solution(partition, mapping, priority, dtype, backend)
 
     def seeded_solution(self, processor: int, cuts: bool = False) -> Solution:
-        """A heuristic seed: everything on ``processor``, no (or random) cuts."""
+        """A heuristic seed: everything on ``processor``, no (or random) cuts.
+
+        The (dtype, backend) genes default to (0, 0) = (fp32, default); when
+        the factory knows its processors and the pinned one cannot execute
+        that configuration (e.g. an fp16/int8-only NPU), the seed instead
+        carries the pinned processor's fastest *supported* configuration —
+        otherwise the "everything on P" seed simulates under the capability
+        fallback penalty and is useless as GA seeding material.
+        """
         r = self.rng
         partition = [
             [1 if (cuts and r.random() < self.cut_prob) else 0 for _ in range(g.num_edges)]
@@ -167,7 +180,27 @@ class SolutionFactory:
         ]
         mapping = [[processor] * g.num_layers for g in self.graphs]
         priority = list(range(len(self.graphs)))
-        return Solution(partition, mapping, priority, [0] * len(self.graphs), [0] * len(self.graphs))
+        di, bi = self._seed_config(processor)
+        return Solution(partition, mapping, priority,
+                        [di] * len(self.graphs), [bi] * len(self.graphs))
+
+    def _seed_config(self, processor: int) -> Tuple[int, int]:
+        """(dtype, backend) gene pair for a seed pinned to ``processor``:
+        (0, 0) when supported (or capabilities unknown), else the supported
+        pair with the highest throughput. Deterministic — no RNG draw, so
+        adding capability knowledge never perturbs the seed RNG stream."""
+        if self.processors is None:
+            return (0, 0)
+        proc = next((p for p in self.processors if p.pid == processor), None)
+        if proc is None or proc.thr(DTYPES[0], BACKENDS[0]) is not None:
+            return (0, 0)
+        best: Optional[Tuple[float, int, int]] = None
+        for di in range(min(self.num_dtypes, len(DTYPES))):
+            for bi in range(min(self.num_backends, len(BACKENDS))):
+                t = proc.thr(DTYPES[di], BACKENDS[bi])
+                if t is not None and (best is None or t > best[0]):
+                    best = (t, di, bi)
+        return (best[1], best[2]) if best is not None else (0, 0)
 
     # -- crossover ------------------------------------------------------------
     def crossover(self, a: Solution, b: Solution) -> Tuple[Solution, Solution]:

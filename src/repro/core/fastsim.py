@@ -251,7 +251,7 @@ class SpecBuilder:
             hit = cache[key] = (sgs, deps, succs, owner, in_cuts)
         return hit
 
-    def decode(self, sol) -> List[List[PlacedSubgraph]]:
+    def decode(self, sol: Solution) -> List[List[PlacedSubgraph]]:
         """`decode_solution` with the partition cache."""
         out: List[List[PlacedSubgraph]] = []
         prio_rank = {n: r for r, n in enumerate(sol.priority)}
@@ -271,7 +271,7 @@ class SpecBuilder:
             ])
         return out
 
-    def _net_entry(self, sol, net: int) -> tuple:
+    def _net_entry(self, sol: Solution, net: int) -> tuple:
         """Cached (sgs, procs, dep_counts, succ_indptr, succ_flat, comm,
         quant, exec) for one network under one *decoded* assignment.
 
@@ -374,7 +374,7 @@ class SpecBuilder:
             cache.clear()
         return dropped
 
-    def build(self, sol) -> FastSimSpec:
+    def build(self, sol: Solution) -> FastSimSpec:
         prio_rank = {n: r for r, n in enumerate(sol.priority)}
         offsets: List[int] = []
         counts: List[int] = []
@@ -661,7 +661,8 @@ class FastSimulator:
         # the hot loop never re-keys into per-request dicts:
         #   item = (rec | None, flat sg id, RequestRecord, pending list)
 
-        def release(gid: int, rid: int, g: int, rr, pend) -> None:
+        def release(gid: int, rid: int, g: int, rr: "RequestRecord",
+                    pend: List[List[int]]) -> None:
             nonlocal seq, release_seq
             pid = proc_of[g]
             if collect_tasks:

@@ -21,6 +21,10 @@ Objective = Tuple[float, ...]
 EvalFn = Callable[[Solution], Objective]
 # batch evaluator: (solutions, accurate) -> objectives, one per solution
 BatchEvalFn = Callable[[Sequence[Solution], bool], List[Objective]]
+# static pre-screen: worst-rank objective for a *provably* infeasible
+# chromosome (simulating it could never beat any feasible candidate),
+# or None when the analyzer cannot prove anything — the sound default.
+PrescreenFn = Callable[[Solution], Optional[Objective]]
 
 
 @dataclass
@@ -54,6 +58,15 @@ class GAConfig:
     # float tolerance rather than bit-exactness, so search trajectories
     # may diverge from the scalar path after many generations.
     batch_eval: "bool | str" = False
+    # Route every chromosome through the static analyzer
+    # (repro.analysis.schedlint) before objectives(): proven-infeasible
+    # candidates get worst-rank fitness without a single simulated event.
+    # Sound-only by contract — the analyzer may only flag chromosomes the
+    # simulator could never score feasible (structural corruption, memory
+    # capacity violations), so with pruning off the search trajectory is
+    # bit-identical whenever nothing would have been pruned (enforced by
+    # tests/test_schedlint.py).
+    prescreen: bool = False
     # Device-in-the-loop feedback (paper §4.2/§5): every N generations the
     # scheduler hands the current Pareto front to ``measure_device``, which
     # executes candidates on the real runtime, writes measured per-subgraph
@@ -74,6 +87,9 @@ class GAResult:
     # (generation, changed-profile-entry count) per device-in-the-loop
     # measurement round that actually updated the ProfileDB
     device_updates: List[Tuple[int, int]] = field(default_factory=list)
+    # static pre-screen counters: chromosomes checked, pruned as proven
+    # infeasible, and the simulator calls those prunes avoided
+    prescreen_stats: Dict[str, int] = field(default_factory=dict)
 
 
 def _dominates(a: Objective, b: Objective) -> bool:
@@ -90,6 +106,7 @@ class GeneticScheduler:
         evaluate_oracle: Optional[EvalFn] = None,
         evaluate_batch: Optional[BatchEvalFn] = None,
         measure_device: Optional[Callable[[Sequence[Solution]], int]] = None,
+        prescreen: Optional[PrescreenFn] = None,
     ):
         self.factory = factory
         self.evaluate_fast = evaluate_fast
@@ -98,18 +115,39 @@ class GeneticScheduler:
         self.evaluate_batch = evaluate_batch
         self.measure_device = measure_device
         self.cfg = config or GAConfig()
+        self.prescreen = prescreen if self.cfg.prescreen else None
+        self.prescreen_stats: Dict[str, int] = {
+            "checked": 0, "pruned": 0, "simulations_avoided": 0}
         self.rng = random.Random(self.cfg.seed)
         self.evaluations = 0
         self._cache: Dict[Tuple, Objective] = {}
 
     # -- evaluation with memoization ------------------------------------------
+    def _prescreen(self, sol: Solution) -> Optional[Objective]:
+        """Static verdict for ``sol``: a worst-rank objective when the
+        analyzer proves infeasibility, else None (simulate normally).
+
+        Never touches ``self.rng``, so with no prunes the search trajectory
+        is bit-identical to a prescreen-off run.
+        """
+        if self.prescreen is None:
+            return None
+        self.prescreen_stats["checked"] += 1
+        obj = self.prescreen(sol)
+        if obj is not None:
+            self.prescreen_stats["pruned"] += 1
+            self.prescreen_stats["simulations_avoided"] += 1
+        return obj
+
     def _eval(self, sol: Solution, accurate: bool = False) -> Objective:
         key = (sol.key(), accurate)
         if key in self._cache:
             return self._cache[key]
-        fn = self.evaluate_accurate if accurate else self.evaluate_fast
-        obj = fn(sol)
-        self.evaluations += 1
+        obj = self._prescreen(sol)
+        if obj is None:
+            fn = self.evaluate_accurate if accurate else self.evaluate_fast
+            obj = fn(sol)
+            self.evaluations += 1
         self._cache[key] = obj
         return obj
 
@@ -131,7 +169,11 @@ class GeneticScheduler:
             key = (s.key(), accurate)
             if key not in self._cache and key not in seen:
                 seen.add(key)
-                missing.append(s)
+                pruned = self._prescreen(s)
+                if pruned is not None:
+                    self._cache[key] = pruned
+                else:
+                    missing.append(s)
         if missing:
             objs = self.evaluate_batch(missing, accurate)
             for s, obj in zip(missing, objs):
@@ -309,4 +351,5 @@ class GeneticScheduler:
             pareto=pareto, history=history, generations=gen,
             evaluations=self.evaluations, oracle_drift=oracle_drift,
             device_updates=device_updates,
+            prescreen_stats=dict(self.prescreen_stats),
         )

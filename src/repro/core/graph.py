@@ -12,8 +12,8 @@ device-in-the-loop profiler can cache measurements across GA generations.
 from __future__ import annotations
 
 import hashlib
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, FrozenSet, Iterable, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Any, Dict, List, Sequence, Tuple
 
 
 @dataclass(frozen=True)
@@ -66,9 +66,10 @@ class ModelGraph:
         self.layers: List[Layer] = list(layers)
         self.edges: List[Edge] = list(edges)
         n = len(self.layers)
-        for i, l in enumerate(self.layers):
-            if l.index != i:
-                raise ValueError(f"layer {l.name} has index {l.index}, expected {i}")
+        for i, layer in enumerate(self.layers):
+            if layer.index != i:
+                raise ValueError(
+                    f"layer {layer.name} has index {layer.index}, expected {i}")
         for e in self.edges:
             if not (0 <= e.src < n and 0 <= e.dst < n):
                 raise ValueError(f"edge {e} out of range")
@@ -92,11 +93,11 @@ class ModelGraph:
 
     @property
     def total_macs(self) -> float:
-        return sum(l.macs for l in self.layers)
+        return sum(layer.macs for layer in self.layers)
 
     @property
     def total_param_bytes(self) -> int:
-        return sum(l.param_bytes for l in self.layers)
+        return sum(layer.param_bytes for layer in self.layers)
 
     def sources(self) -> List[int]:
         return [i for i in range(self.num_layers) if not self.in_edges[i]]
@@ -292,6 +293,68 @@ class Subgraph:
             out = root.hex()
         memo[extra] = out
         return out
+
+
+def partition_quotient(
+    graph: ModelGraph, subgraphs: Sequence[Subgraph]
+) -> Tuple[Dict[int, int], List[Tuple[int, int]], List[str]]:
+    """Contract a partition of ``graph`` to its subgraph quotient graph.
+
+    Returns ``(owner, edges, problems)``: ``owner`` maps each layer id to the
+    position of the subgraph owning it in ``subgraphs``; ``edges`` are the
+    deduplicated cross-subgraph dependencies ``(src_sg, dst_sg)``; and
+    ``problems`` lists structural defects found while contracting — layers
+    owned by no subgraph or by more than one, out-of-range layer ids, and
+    graph edges dangling out of the owned set. ``partition`` never produces
+    these, so a nonempty ``problems`` means the subgraph list was corrupted
+    after decode; the static analyzer reports them as SL002.
+    """
+    owner: Dict[int, int] = {}
+    problems: List[str] = []
+    for pos, sg in enumerate(subgraphs):
+        for lid in sg.layer_ids:
+            if not 0 <= lid < graph.num_layers:
+                problems.append(f"subgraph {pos} owns out-of-range layer {lid}")
+                continue
+            if lid in owner:
+                problems.append(
+                    f"layer {lid} owned by subgraphs {owner[lid]} and {pos}")
+                continue
+            owner[lid] = pos
+    for lid in range(graph.num_layers):
+        if lid not in owner:
+            problems.append(f"layer {lid} of {graph.name} is owned by no subgraph")
+    edges: List[Tuple[int, int]] = []
+    seen = set()
+    for e in graph.edges:
+        su, sv = owner.get(e.src), owner.get(e.dst)
+        if su is None or sv is None:
+            problems.append(
+                f"edge {e.src}->{e.dst} dangles outside the partition")
+            continue
+        if su != sv and (su, sv) not in seen:
+            seen.add((su, sv))
+            edges.append((su, sv))
+    return owner, edges, problems
+
+
+def quotient_is_acyclic(num_nodes: int, edges: Sequence[Tuple[int, int]]) -> bool:
+    """Kahn's algorithm over a contracted subgraph quotient graph."""
+    indeg = [0] * num_nodes
+    succs: Dict[int, List[int]] = {}
+    for u, v in edges:
+        indeg[v] += 1
+        succs.setdefault(u, []).append(v)
+    ready = [i for i in range(num_nodes) if indeg[i] == 0]
+    done = 0
+    while ready:
+        u = ready.pop()
+        done += 1
+        for v in succs.get(u, ()):
+            indeg[v] -= 1
+            if indeg[v] == 0:
+                ready.append(v)
+    return done == num_nodes
 
 
 def chain_graph(

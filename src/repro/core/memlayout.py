@@ -1,0 +1,20 @@
+"""Tensor-memory chunk layout shared by the runtime pool and the analyzer.
+
+The runtime's :class:`~repro.runtime.tensorpool.TensorPool` allocates in
+fixed 2 KiB chunks (paper §5.3) so freed buffers re-serve any request of
+the same rounded size. The static analyzer (:mod:`repro.analysis`) must
+bound peak residency with *exactly* the pool's rounding — its SL020 memory
+proofs are validated by provisioning through a capacity-bounded pool — so
+the chunk math lives here, in a module with no runtime (jax) dependency,
+and both sides import it.
+"""
+from __future__ import annotations
+
+CHUNK = 2048  # bytes, paper §5.3
+
+
+def rounded_chunk_bytes(nbytes: int) -> int:
+    """Bytes actually consumed by an ``nbytes`` allocation: rounded up to
+    the chunk quantum, minimum one chunk (a zero-byte tensor still holds a
+    chunk — the pool hands out real buffers, never aliases of nothing)."""
+    return max(CHUNK, ((int(nbytes) + CHUNK - 1) // CHUNK) * CHUNK)

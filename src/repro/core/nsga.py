@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import math
 import random
-from itertools import combinations
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np

@@ -8,8 +8,8 @@ simulator and runtime are agnostic to which world they run in.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
 
 # TPU v5e per-chip constants (also used by launch/roofline.py).
 TPU_PEAK_FLOPS_BF16 = 197e12      # FLOP/s
@@ -34,6 +34,11 @@ class Processor:
     # `fragmentation_ratio` times slower per MAC than the whole fused graph.
     fragmentation_ratio: float = 1.0
     fallback_penalty: float = 30.0       # NNAPI-like worst case (Table 2)
+    # Tensor-memory budget in bytes for weights + live activations on this
+    # processor (chunk-rounded per runtime/tensorpool.py). 0 = unconstrained;
+    # the static analyzer (repro.analysis) rejects schedules whose peak
+    # residency lower bound provably exceeds a nonzero budget.
+    memory_capacity: int = 0
     # TPU-lane parameters ------------------------------------------------------
     chips: int = 0
     peak_flops: float = 0.0

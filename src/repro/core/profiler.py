@@ -23,11 +23,10 @@ Backends:
 from __future__ import annotations
 
 import json
-import math
 import os
 import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional, Protocol, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Protocol, Sequence, Tuple
 
 from .chromosome import PlacedSubgraph
 from .graph import Subgraph

@@ -16,11 +16,11 @@ interval and the per-request relative deadline in every case.
 from __future__ import annotations
 
 import random
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from .arrivals import ArrivalSpec
-from .chromosome import BACKENDS, DTYPES, PlacedSubgraph, Solution
+from .chromosome import BACKENDS, DTYPES, PlacedSubgraph
 from .faults import FaultSpec
 from .graph import ModelGraph
 from .processors import Processor

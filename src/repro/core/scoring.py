@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, Generator, List, Optional, Sequence, Tuple
 
 RT_K = 15.0  # sigmoid sharpness, same as XRBench
 
@@ -193,7 +193,8 @@ def bisect_alpha_probes(
     step: float = 0.05,
     threshold: float = 0.995,
     confirm: int = 4,
-):
+    skip_below: float = 0.0,
+) -> Generator[float, float, float]:
     """Generator core of the bracket-then-bisect α*-search.
 
     Yields the α value to evaluate next; the driver sends back the score.
@@ -203,14 +204,24 @@ def bisect_alpha_probes(
     (``StaticAnalyzer.population_saturation``) share one algorithm, so they
     probe identical lattice points and return identical results by
     construction.
+
+    ``skip_below`` is the static analyzer's proven infeasibility bound: the
+    caller guarantees ``score(α) < threshold`` for every ``α < skip_below``
+    (repro.analysis deadline lower bounds). Probes strictly below it are
+    answered with score 0.0 without yielding — i.e. without simulating —
+    which cannot change α* as long as the guarantee holds (the skipped
+    probes appear in ``scores`` as 0.0 samples).
     """
     n = int(round((hi - lo) / step))
     cache: Dict[int, float] = {}
 
-    def ev(i: int):
+    def ev(i: int) -> Generator[float, float, float]:
         s = cache.get(i)
         if s is None:
-            s = yield round(lo + step * i, 4)
+            if round(lo + step * i, 4) < skip_below:
+                s = 0.0  # proven < threshold by the caller; don't simulate
+            else:
+                s = yield round(lo + step * i, 4)
             cache[i] = s
         return s
 
@@ -246,6 +257,7 @@ def saturation_multiplier_bisect(
     step: float = 0.05,
     threshold: float = 0.995,
     confirm: int = 4,
+    skip_below: float = 0.0,
 ) -> SaturationResult:
     """Bracket-then-bisect α*-search over the (near-monotone) score curve.
 
@@ -264,9 +276,10 @@ def saturation_multiplier_bisect(
        trade-off versus the exhaustive scan.
 
     The probe sequence itself lives in :func:`bisect_alpha_probes`; this
-    wrapper drives it with a plain callable.
+    wrapper drives it with a plain callable. ``skip_below`` forwards the
+    analyzer's proven infeasibility bound (see :func:`bisect_alpha_probes`).
     """
-    gen = bisect_alpha_probes(lo, hi, step, threshold, confirm)
+    gen = bisect_alpha_probes(lo, hi, step, threshold, confirm, skip_below)
     try:
         alpha = next(gen)
         while True:

@@ -14,8 +14,8 @@ from __future__ import annotations
 
 import math
 import random
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, Generator, List, Optional, Sequence, Tuple
 
 from .arrivals import ArrivalSpec, arrival_horizon, draw_arrivals
 from .chromosome import PlacedSubgraph
@@ -285,7 +285,7 @@ class RuntimeSimulator:
 
         fault_stream = FaultStream(self.faults) if self.faults else None
 
-        def worker(proc: Processor):
+        def worker(proc: Processor) -> Generator:
             store = stores[proc.pid]
             sigma = self.noise.sigma(proc.kind) if self.noise else 0.0
             while True:
@@ -322,7 +322,7 @@ class RuntimeSimulator:
                 task_done(gid, rid, net, k)
 
         def request_source(gid: int, nets: Sequence[int],
-                           table: Sequence[float]):
+                           table: Sequence[float]) -> Generator:
             for rid in range(self.num_requests):
                 arrival = table[rid]
                 if arrival > env.now:

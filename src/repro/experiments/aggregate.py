@@ -19,7 +19,7 @@ sweep directory and easy to unit-test on canned results.
 from __future__ import annotations
 
 import math
-from typing import Dict, List, Sequence
+from typing import Dict, Sequence
 
 from ..core.scoring import percentile
 from .evaluate import METHODS, ScenarioResult

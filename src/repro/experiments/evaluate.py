@@ -28,8 +28,8 @@ from __future__ import annotations
 
 import math
 import time
-from dataclasses import asdict, dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import asdict, dataclass
+from typing import Dict, List, Optional
 
 from ..core import (
     AnalyzerConfig,
@@ -92,6 +92,15 @@ class SweepConfig:
     # in ``ScenarioResult.runtime_conformance``. Adds one runtime replay per
     # scenario (~ms); results are otherwise unchanged.
     validate_runtime: bool = False
+    # Static pre-screening (repro.analysis): route GA offspring through the
+    # schedule linter before simulation (proven-infeasible chromosomes get
+    # worst-rank fitness without simulating) and let the α*-searches skip
+    # probes below each solution's proven infeasibility bound. Sound-only:
+    # results can differ from a non-prescreened run only by excluding
+    # chromosomes the linter *proves* can never score feasible. Also records
+    # per-scenario ``prescreen_stats`` and a lint summary of Puzzle's chosen
+    # schedule in the results.
+    prescreen: bool = False
 
     def to_json(self) -> Dict[str, object]:
         return asdict(self)
@@ -165,6 +174,11 @@ class ScenarioResult:
     # scalar summary of the runtime↔simulator conformance check (only when
     # SweepConfig.validate_runtime; see ConformanceReport.summary())
     runtime_conformance: Optional[Dict[str, object]] = None
+    # GA pre-screen counters {checked, pruned, simulations_avoided} and the
+    # lint summary of Puzzle's chosen schedule (only when
+    # SweepConfig.prescreen; see repro.analysis)
+    prescreen_stats: Optional[Dict[str, int]] = None
+    lint: Optional[Dict[str, object]] = None
 
     def __post_init__(self) -> None:
         # NaN has no JSON representation and poisons every downstream
@@ -204,6 +218,9 @@ class ScenarioResult:
             "wall_s": self.wall_s,
             **({"runtime_conformance": dict(self.runtime_conformance)}
                if self.runtime_conformance is not None else {}),
+            **({"prescreen_stats": dict(self.prescreen_stats)}
+               if self.prescreen_stats is not None else {}),
+            **({"lint": dict(self.lint)} if self.lint is not None else {}),
         }
 
     @classmethod
@@ -226,6 +243,8 @@ class ScenarioResult:
             pareto_size=int(d["pareto_size"]),
             wall_s=float(d["wall_s"]),
             runtime_conformance=d.get("runtime_conformance"),
+            prescreen_stats=d.get("prescreen_stats"),
+            lint=d.get("lint"),
         )
 
 
@@ -265,11 +284,13 @@ def evaluate_scenario(
             saturation_mode=config.saturation_mode,
             batch_workers=config.batch_workers,
             batch_engine=config.batch_engine,
+            prescreen=config.prescreen,
             ga=GAConfig(
                 pop_size=config.pop_size,
                 max_generations=config.max_generations,
                 min_generations=config.min_generations,
                 seed=spec.seed,
+                prescreen=config.prescreen,
             ),
         ),
     )
@@ -365,6 +386,22 @@ def _evaluate_with(
         )
         conformance = report.summary()
 
+    prescreen_stats = None
+    lint_summary = None
+    if config.prescreen:
+        prescreen_stats = dict(ga.prescreen_stats)
+        # lint the deployed schedule at the satisfaction α: findings and the
+        # proven α lower bound land next to the α* it constrains from below
+        report = analyzer.lint(best_solution["puzzle"],
+                               alpha=config.satisfaction_alpha)
+        lint_summary = {
+            "counts": report.counts(),
+            "errors": len(report.errors()),
+            "warnings": len(report.warnings()),
+            "infeasible": report.infeasible,
+            "alpha_lower_bound": report.alpha_lower_bound,
+        }
+
     return ScenarioResult(
         spec=spec,
         base_periods_s=list(analyzer.base_periods),
@@ -377,4 +414,6 @@ def _evaluate_with(
         pareto_size=len(ga.pareto),
         wall_s=time.perf_counter() - t0,
         runtime_conformance=conformance,
+        prescreen_stats=prescreen_stats,
+        lint=lint_summary,
     )

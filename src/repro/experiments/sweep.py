@@ -42,12 +42,11 @@ import os
 import sys
 import time
 from concurrent.futures import FIRST_COMPLETED, ProcessPoolExecutor, wait
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, Optional, Sequence
 
 from .aggregate import aggregate_results
 from .evaluate import (
     METHODS,
-    EvalContext,
     ScenarioResult,
     SweepConfig,
     default_context,
@@ -207,6 +206,15 @@ def format_summary(doc: Dict[str, object]) -> str:
         f"{best['vs_npu_only']:.2f}× vs NPU Only, "
         f"{best['vs_best_mapping']:.2f}× vs Best Mapping"
     )
+    stats = [s["prescreen_stats"] for s in doc["scenarios"]
+             if s.get("prescreen_stats") is not None]
+    if stats:
+        checked = sum(s["checked"] for s in stats)
+        pruned = sum(s["pruned"] for s in stats)
+        lines.append(
+            f"prescreen: {pruned}/{checked} offspring pruned without "
+            f"simulation across {len(stats)} scenarios"
+        )
     return "\n".join(lines)
 
 
@@ -282,6 +290,12 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                          "lock-step core (documented float tolerance, "
                          "transparent numpy fallback; see "
                          "BENCH_simspeed.json for the measured speedup)")
+    ap.add_argument("--prescreen", action="store_true",
+                    help="route GA offspring through the static schedule "
+                         "linter (repro.analysis) before simulation and "
+                         "skip α* probes below each solution's proven "
+                         "infeasibility bound; records per-scenario prune "
+                         "stats and a lint summary of the chosen schedule")
     ap.add_argument("--validate-runtime", action="store_true",
                     help="replay each scenario's best Puzzle schedule on the "
                          "virtual-clock PuzzleRuntime and record the "
@@ -327,6 +341,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         batch_workers=args.batch_workers,
         batch_engine=args.batch_engine,
         validate_runtime=args.validate_runtime,
+        prescreen=args.prescreen,
     )
     run_dir = args.run_dir or (
         f"results/sweep_s{args.seed}_n{args.scenarios}"

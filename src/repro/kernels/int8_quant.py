@@ -9,12 +9,10 @@ Oracle: ``repro.kernels.ref.quantize_ref``.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from .compat import CompilerParams
 

@@ -22,7 +22,7 @@ import argparse
 import json
 import time
 import traceback
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 
@@ -30,7 +30,7 @@ from ..configs import ALIASES, get_config
 from ..train.optimizer import optimizer_for_config
 from .mesh import make_production_mesh
 from .hlo_analysis import analyze
-from .roofline import HBM_PER_CHIP, build_report
+from .roofline import build_report
 from .shapes import INPUT_SHAPES, config_for_shape
 from .steps import make_step
 

@@ -230,8 +230,6 @@ def fusion_traffic(inst: Instr, comp: Computation, fused: Computation) -> float:
                         out.append((nm, fi))
         return out
 
-    dus_instrs = [fi for fi in fused.instrs
-                  if fi.opcode == "dynamic-update-slice"]
     total = 0.0
     for pos, op_name in enumerate(inst.operands):
         full = comp.by_name[op_name].result_bytes if op_name in comp.by_name else 0

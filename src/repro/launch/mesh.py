@@ -7,7 +7,6 @@ import, and tests/benches must keep seeing one device.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 from jax.sharding import Mesh

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional
 
 TPU_PEAK_FLOPS = 197e12
 TPU_HBM_BW = 819e9

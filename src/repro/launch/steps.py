@@ -7,9 +7,8 @@ ShapeDtypeStructs, no allocation).
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,17 +19,11 @@ from ..models.transformer import (
     forward_decode,
     forward_prefill,
     forward_train,
-    init_cache,
     init_params,
     params_spec,
 )
 from ..sharding.context import activation_sharding
-from ..sharding.rules import (
-    batch_spec,
-    cache_shardings,
-    spec_for_shape,
-    tree_shardings,
-)
+from ..sharding.rules import batch_spec, cache_shardings, tree_shardings
 from ..train.optimizer import make_optimizer
 from .shapes import InputShape, config_for_shape, input_specs
 

@@ -34,10 +34,14 @@ def main() -> None:
     cross_fn = None
     if cfg.arch_type == "vlm":
         import jax.numpy as jnp
-        cross_fn = lambda b: jnp.ones((b, cfg.num_image_tokens, cfg.d_model)) * 0.01
+
+        def cross_fn(b):
+            return jnp.ones((b, cfg.num_image_tokens, cfg.d_model)) * 0.01
     if cfg.is_encoder_decoder:
         import jax.numpy as jnp
-        cross_fn = lambda b: jnp.ones((b, cfg.encoder_seq_len, cfg.d_model)) * 0.01
+
+        def cross_fn(b):
+            return jnp.ones((b, cfg.encoder_seq_len, cfg.d_model)) * 0.01
 
     res = train(cfg, TrainConfig(
         steps=args.steps, batch_size=args.batch, seq_len=args.seq,

@@ -11,7 +11,6 @@ sub-quadratic for dense models).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -102,7 +101,7 @@ def blockwise_attention(
         qpos = jax.lax.dynamic_slice_in_dim(q_pos, qi * q_block, q_block)
 
         def kv_step(carry, ki):
-            m, l, acc = carry
+            m, denom, acc = carry
             kb = kp[:, :, ki]                          # (B, Kv, kb, hd)
             vb = vp[:, :, ki]
             s = jnp.einsum(
@@ -120,19 +119,19 @@ def blockwise_attention(
             m_new = jnp.maximum(m, s.max(axis=-1))
             p = jnp.exp(s - m_new[..., None])
             alpha = jnp.exp(m - m_new)
-            l_new = l * alpha + p.sum(axis=-1)
+            denom_new = denom * alpha + p.sum(axis=-1)
             acc_new = acc * alpha[..., None] + jnp.einsum(
                 "bhgqk,bhkd->bhgqd", p, vb.astype(jnp.float32)
             )
-            return (m_new, l_new, acc_new), None
+            return (m_new, denom_new, acc_new), None
 
         init = (
             jnp.full((b, kv, g, q_block), NEG_INF, dtype=jnp.float32),
             jnp.zeros((b, kv, g, q_block), dtype=jnp.float32),
             jnp.zeros((b, kv, g, q_block, hd), dtype=jnp.float32),
         )
-        (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
-        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        (m, denom, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+        out = acc / jnp.maximum(denom, 1e-30)[..., None]
         return out.astype(q.dtype)                     # (B, Kv, G, qb, hd)
 
     blocks = jax.lax.map(q_step, jnp.arange(nq))       # (nq, B, Kv, G, qb, hd)

@@ -13,7 +13,7 @@ O(pattern), not O(num_layers).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 # block kinds

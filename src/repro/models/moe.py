@@ -15,7 +15,7 @@ every token and masks) used to property-test the dispatch path.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -58,7 +58,6 @@ def router_topk(
 
 def load_balance_loss(probs: jnp.ndarray, idx: jnp.ndarray, num_experts: int) -> jnp.ndarray:
     """Switch-style auxiliary loss: E * Σ_e f_e · P_e."""
-    t = probs.shape[0]
     counts = jnp.zeros((num_experts,), jnp.float32).at[idx.reshape(-1)].add(1.0)
     f = counts / jnp.maximum(idx.size, 1)
     p = probs.mean(axis=0)

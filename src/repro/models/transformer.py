@@ -18,7 +18,6 @@ from the stub modality embeddings.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -31,7 +30,7 @@ from .attention import (
     decode_attention,
     project_qkv,
 )
-from .config import ATTN, ATTN_MOE, CROSS, SSM, SSM_MLP, SSM_MOE, ModelConfig
+from .config import ATTN, ATTN_MOE, CROSS, SSM_MLP, ModelConfig
 from .layers import (
     attention_spec,
     dense_init,
@@ -43,7 +42,7 @@ from .layers import (
 )
 from .moe import init_moe, moe_ffn, moe_spec
 from .ssm import init_mamba2, mamba2_decode_step, mamba2_mixer, mamba2_spec
-from ..sharding.context import activation_sharding, constrain_batch
+from ..sharding.context import constrain_batch
 
 Params = Dict[str, Any]
 

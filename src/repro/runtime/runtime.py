@@ -25,7 +25,7 @@ from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 
 from ..core.arrivals import ArrivalSpec, arrival_horizon, draw_arrivals
-from ..core.chromosome import PlacedSubgraph, Solution, decode_solution
+from ..core.chromosome import Solution, decode_solution
 from ..core.fastsim import FastSimSpec
 from ..core.faults import FaultSpec
 from ..core.graph import ModelGraph
@@ -34,7 +34,7 @@ from ..core.simulator import NoiseModel
 from .clock import SimCostSource, VirtualClock, WallClock
 from .coordinator import Coordinator, RequestState
 from .engine import ENGINE_REGISTRY, make_engine
-from .recovery import RecoveryEvent, RecoveryPolicy, greedy_remap
+from .recovery import RecoveryEvent, greedy_remap
 from .tensorpool import SharedBufferTransport, TensorPool
 from .worker import DISPATCH_TOKEN, Worker
 

@@ -15,12 +15,25 @@ from __future__ import annotations
 
 import threading
 import weakref
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-CHUNK = 2048  # bytes, paper §5.3
+# The chunk math lives in repro.core.memlayout (no jax dependency) so the
+# static analyzer can bound residency with exactly the pool's accounting
+# without importing the runtime package; re-exported here for compat.
+from ..core.memlayout import CHUNK, rounded_chunk_bytes
+
+__all__ = [
+    "CHUNK", "rounded_chunk_bytes", "TensorPoolOOM", "PoolStats",
+    "TensorPool", "SharedBufferTransport",
+]
+
+
+class TensorPoolOOM(MemoryError):
+    """Raised by :meth:`TensorPool.acquire` when a capacity-bounded pool
+    would exceed its budget even after recycling every free buffer."""
 
 
 @dataclass
@@ -34,6 +47,10 @@ class PoolStats:
     bytes_allocated: int = 0
     memcpy_bytes: int = 0
     memcpy_calls: int = 0
+    #: high-water mark of bytes held by live (unreleased) acquisitions
+    peak_bytes_in_use: int = 0
+    #: acquisitions refused because they would exceed ``capacity_bytes``
+    oom_rejections: int = 0
 
 
 class TensorPool:
@@ -61,8 +78,12 @@ class TensorPool:
     caller that keeps using a view it already released.
     """
 
-    def __init__(self, enabled: bool = True):
+    def __init__(self, enabled: bool = True,
+                 capacity_bytes: Optional[int] = None):
+        if capacity_bytes is not None and capacity_bytes <= 0:
+            raise ValueError("capacity_bytes must be positive (or None)")
         self.enabled = enabled
+        self._capacity = capacity_bytes
         self._free: Dict[int, List[np.ndarray]] = {}
         self._lock = threading.Lock()
         # id(base) -> base for buffers handed out and not yet released.
@@ -73,8 +94,38 @@ class TensorPool:
             weakref.WeakValueDictionary())
         self.stats = PoolStats()
 
+    def capacity(self) -> Optional[int]:
+        """Byte budget this pool enforces, or ``None`` when unbounded."""
+        return self._capacity
+
+    def bytes_in_use(self) -> int:
+        """Chunk-rounded bytes currently held by unreleased acquisitions.
+
+        Derived from the outstanding-buffer registry (weak values), so views
+        dropped without an explicit ``release`` stop counting once collected
+        — the figure cannot drift. Only meaningful when ``enabled``; a
+        disabled pool tracks nothing and reports 0.
+        """
+        with self._lock:
+            return self._in_use_locked()
+
+    def _in_use_locked(self) -> int:
+        return sum(buf.nbytes for buf in self._outstanding.values())
+
     def _rounded(self, nbytes: int) -> int:
-        return max(CHUNK, ((nbytes + CHUNK - 1) // CHUNK) * CHUNK)
+        return rounded_chunk_bytes(nbytes)
+
+    def _reserve(self, size: int) -> None:
+        # called under self._lock; capacity counts live acquisitions only
+        # (free-list buffers are recyclable, not occupied)
+        in_use = self._in_use_locked()
+        if self._capacity is not None and in_use + size > self._capacity:
+            self.stats.oom_rejections += 1
+            raise TensorPoolOOM(
+                f"acquire of {size} B exceeds pool capacity "
+                f"{self._capacity} B ({in_use} B in use)")
+        if in_use + size > self.stats.peak_bytes_in_use:
+            self.stats.peak_bytes_in_use = in_use + size
 
     def acquire(self, shape: Tuple[int, ...], dtype) -> np.ndarray:
         nbytes = int(np.prod(shape)) * np.dtype(dtype).itemsize
@@ -83,10 +134,12 @@ class TensorPool:
             with self._lock:
                 bucket = self._free.get(size)
                 if bucket:
+                    self._reserve(size)
                     buf = bucket.pop()
                     self.stats.reuses += 1
                     self._outstanding[id(buf)] = buf
                     return buf[:nbytes].view(dtype).reshape(shape)
+                self._reserve(size)
         self.stats.mallocs += 1
         self.stats.bytes_allocated += size
         buf = np.empty(size, dtype=np.uint8)

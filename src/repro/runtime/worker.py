@@ -21,12 +21,12 @@ import math
 import queue
 import threading
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from .clock import SimCostSource, WallClock
-from .engine import Engine, make_engine
+from .engine import Engine
 from .recovery import RecoveryPolicy
 from .tensorpool import SharedBufferTransport, TensorPool
 

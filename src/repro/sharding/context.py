@@ -12,7 +12,7 @@ Outside a mesh context (CPU smoke tests) the constraints are no-ops.
 from __future__ import annotations
 
 import contextlib
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 import jax
 from jax.sharding import PartitionSpec as P

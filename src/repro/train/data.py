@@ -8,7 +8,7 @@ entropy. Deterministic, shardable, infinite.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterator, Optional, Tuple
+from typing import Iterator, Tuple
 
 import numpy as np
 
@@ -54,7 +54,6 @@ class MarkovDataset:
     def batches(self, start_step: int = 0) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
         step = start_step
         while True:
-            rng = np.random.default_rng((self.cfg.seed, step))
             toks = np.stack([
                 self._walk(np.random.default_rng((self.cfg.seed, step, b)),
                            self.cfg.seq_len)

@@ -4,12 +4,11 @@ configs) and, unchanged, on a production mesh (full configs).
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from dataclasses import dataclass
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..models.config import ModelConfig
 from ..models.transformer import forward_train, init_params

@@ -13,7 +13,6 @@ pjit-transparent (states inherit the parameter shardings).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -52,7 +51,9 @@ class OptState(NamedTuple):
 
 def adamw(cfg: AdamWConfig = AdamWConfig()):
     def init(params: Params) -> OptState:
-        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        def zeros(p):
+            return jnp.zeros_like(p, dtype=jnp.float32)
+
         return OptState(
             step=jnp.zeros((), jnp.int32),
             inner={

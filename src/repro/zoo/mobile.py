@@ -14,9 +14,7 @@ Two faces per model:
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Sequence, Tuple
 
 import numpy as np
 
@@ -118,10 +116,10 @@ class ExecutableMobileModel:
         self.spatial = spatial
         key = jax.random.PRNGKey(seed)
         self._weights: Dict[int, np.ndarray] = {}
-        for l in self.graph.layers:
+        for layer in self.graph.layers:
             key, sub = jax.random.split(key)
-            if l.op_type in ("conv", "dwconv"):
-                self._weights[l.index] = np.asarray(
+            if layer.op_type in ("conv", "dwconv"):
+                self._weights[layer.index] = np.asarray(
                     jax.random.normal(sub, (3, 3, channels, channels)) * 0.05,
                     dtype=np.float32,
                 )
@@ -133,9 +131,9 @@ class ExecutableMobileModel:
         jnp = self._jnp
         import jax
 
-        l = self.graph.layers[lid]
+        layer = self.graph.layers[lid]
         x = inputs[0]
-        if l.op_type == "add_merge":
+        if layer.op_type == "add_merge":
             out = x
             for other in inputs[1:]:
                 out = out + other

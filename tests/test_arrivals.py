@@ -7,7 +7,6 @@ byte-identity guarantee, the strictly-increasing realized-event-time
 invariant, JSON round-trips and distribution sanity.
 """
 import json
-import math
 import random
 import statistics
 

@@ -146,10 +146,12 @@ def test_partition_pipelining_improves_throughput():
     placed_cut = decode_solution(cut, [g])
     service = prof.subgraph_time(placed_whole[0][0])
     period = service * 0.7
-    run = lambda placed: RuntimeSimulator(
-        placed, twin, prof, PAPER_COMM_MODEL,
-        groups=[[0]], periods=[period], num_requests=12, input_home_pid=0,
-    ).run().makespans(0)
+    def run(placed):
+        return RuntimeSimulator(
+            placed, twin, prof, PAPER_COMM_MODEL,
+            groups=[[0]], periods=[period], num_requests=12, input_home_pid=0,
+        ).run().makespans(0)
+
     ms_whole, ms_cut = run(placed_whole), run(placed_cut)
     assert ms_whole[-1] > ms_whole[0] * 2      # diverging queue
     assert ms_cut[-1] < ms_cut[0] * 1.5        # pipeline keeps up
@@ -158,11 +160,13 @@ def test_partition_pipelining_improves_throughput():
 
 def test_noise_determinism_and_effect():
     placed, procs, prof = _one_model_setup()
-    mk = lambda seed: RuntimeSimulator(
-        placed, procs, prof, PAPER_COMM_MODEL,
-        groups=[[0]], periods=[1.0], num_requests=5,
-        noise=NoiseModel(seed=seed),
-    ).run().makespans(0)
+    def mk(seed):
+        return RuntimeSimulator(
+            placed, procs, prof, PAPER_COMM_MODEL,
+            groups=[[0]], periods=[1.0], num_requests=5,
+            noise=NoiseModel(seed=seed),
+        ).run().makespans(0)
+
     a, b, c = mk(1), mk(1), mk(2)
     assert a == b                      # same seed -> same trace
     assert a != c                      # different seed -> different trace

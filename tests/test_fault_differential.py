@@ -26,7 +26,6 @@ from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     NO_FAULTS,
-    ArrivalSpec,
     BatchLane,
     BatchSimulator,
     FastSimulator,

@@ -50,7 +50,7 @@ def test_branching_convexity():
         "d", [("conv", 1e6, 0, 10)] * 4, [(0, 1), (0, 2), (1, 3), (2, 3)]
     )
     sgs = g.partition([1, 0, 1, 0])
-    comp = {l: s.sg_index for s in sgs for l in s.layer_ids}
+    comp = {lid: s.sg_index for s in sgs for lid in s.layer_ids}
     # layer 3 cannot be compiled with 0 while 1 is external in between
     assert comp[3] != comp[0]
     # quotient order respects dependencies
@@ -108,10 +108,10 @@ def test_partition_properties(g, data):
                               max_size=g.num_edges))
     sgs = g.partition(bits)
     # 1. exact cover of layers
-    covered = sorted(l for s in sgs for l in s.layer_ids)
+    covered = sorted(lid for s in sgs for lid in s.layer_ids)
     assert covered == list(range(g.num_layers))
     # 2. quotient graph is a DAG with topological order = sg_index order
-    comp = {l: s.sg_index for s in sgs for l in s.layer_ids}
+    comp = {lid: s.sg_index for s in sgs for lid in s.layer_ids}
     for e in g.edges:
         assert comp[e.src] <= comp[e.dst]
     # 3. MAC conservation

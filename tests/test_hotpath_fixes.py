@@ -311,7 +311,9 @@ def test_best_mapping_unchanged_or_better_on_committed_seeds(index):
                           ctx.graphs)
     an = StaticAnalyzer(scen, ctx.processors, ctx.profiler, ctx.comm_model,
                         AnalyzerConfig(ga=GAConfig(seed=spec.seed)))
-    ev = lambda s: an.objectives(s, num_requests=an.cfg.fast_requests)
+    def ev(s):
+        return an.objectives(s, num_requests=an.cfg.fast_requests)
+
     fixed = [tuple(s.fitness)
              for s in an.best_mapping(max_evals=120, seed=spec.seed)]
     pre = [o for _, o in _prefix_best_mapping(
@@ -437,3 +439,84 @@ def test_run_batch_small_batch_stays_in_process():
     with pytest.raises(AssertionError, match="sharded"):
         run_batch(lanes, an.scenario.groups, an.processors,
                   workers=2, pool=_PoisonPool(), shard_min_lanes=0)
+
+
+# -- heuristic seed capability (core/chromosome.py) ---------------------------
+# Surfaced by the static analyzer (SL010) over every committed
+# RESULTS_sweep.json scenario: `seeded_solution(npu)` hardcoded
+# (dtype, backend) = (fp32, default), which the NPU does not support — the
+# "everything on the NPU" GA seed simulated under the 30x capability
+# fallback penalty on all of its layers, making the heuristic seed useless
+# exactly where the paper's NPU-heavy schedules come from.
+
+def _seed_analyzer():
+    nets = [chain_graph(f"s{i}", [("conv", 4e6, 1000, 4000)] * 4)
+            for i in range(2)]
+    scen = build_scenario("seed_fix", [["s0"], ["s1"]],
+                          {f"s{i}": nets[i] for i in range(2)})
+    procs = mobile_processors()
+    prof = Profiler(AnalyticMobileBackend(procs))
+    return StaticAnalyzer(scen, list(procs), prof, PAPER_COMM_MODEL,
+                          AnalyzerConfig())
+
+
+def test_npu_seed_uses_supported_config():
+    """Pre-fix: the NPU seed carried fp32/default (unsupported on the NPU),
+    so every layer simulated at the 30x fallback penalty."""
+    an = _seed_analyzer()
+    npu = next(p for p in an.processors if p.kind == "npu")
+    sol = an.factory.seeded_solution(npu.pid)
+    from repro.core.chromosome import BACKENDS, DTYPES
+    for net in range(len(an.scenario.graphs)):
+        dt, be = DTYPES[sol.dtype[net]], BACKENDS[sol.backend[net]]
+        assert npu.thr(dt, be) is not None, (
+            f"NPU seed pinned to unsupported config ({dt}, {be})")
+    # and the analyzer confirms: no capability warning on the seed
+    assert an.lint(sol).by_code("SL010") == []
+
+
+def test_fixed_npu_seed_dominates_prefix_fp32_seed():
+    """The supported-config seed must be strictly faster than the pre-fix
+    fp32 seed it replaces (which paid the fallback penalty everywhere)."""
+    an = _seed_analyzer()
+    npu = next(p for p in an.processors if p.kind == "npu")
+    fixed = an.factory.seeded_solution(npu.pid)
+    prefix = fixed.copy()
+    prefix.dtype = [0] * len(an.scenario.graphs)
+    prefix.backend = [0] * len(an.scenario.graphs)
+    alpha = an.saturation(fixed).alpha_star
+    assert alpha < an.saturation(prefix).alpha_star, (
+        "fixed seed should saturate at a strictly smaller alpha*")
+    assert an.score(fixed, alpha) >= an.score(prefix, alpha)
+
+
+def test_supported_processor_seeds_unchanged():
+    """Behavior-preserving everywhere else: processors that do support
+    (fp32, default) keep the exact pre-fix seed genes, and a factory
+    without capability knowledge is bit-identical to the old code."""
+    an = _seed_analyzer()
+    for p in an.processors:
+        if p.thr("fp32", "default") is None:
+            continue
+        sol = an.factory.seeded_solution(p.pid)
+        assert sol.dtype == [0] * len(an.scenario.graphs)
+        assert sol.backend == [0] * len(an.scenario.graphs)
+    blind = SolutionFactory(_nets(), num_processors=3,
+                            rng=random.Random(7))
+    sol = blind.seeded_solution(2)  # no processors: legacy (0, 0) genes
+    assert sol.dtype == [0, 0] and sol.backend == [0, 0]
+
+
+def test_seed_config_does_not_touch_rng_stream():
+    """The capability lookup is deterministic: seeding with and without
+    capability knowledge must leave the factory RNG in the same state, so
+    downstream random_solution() draws are unperturbed."""
+    nets = _nets()
+    procs = mobile_processors()
+    with_caps = SolutionFactory(nets, num_processors=3,
+                                rng=random.Random(11), processors=procs)
+    without = SolutionFactory(nets, num_processors=3, rng=random.Random(11))
+    for pid in (0, 1, 2):
+        with_caps.seeded_solution(pid)
+        without.seeded_solution(pid)
+    assert with_caps.random_solution().key() == without.random_solution().key()

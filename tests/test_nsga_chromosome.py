@@ -1,7 +1,6 @@
 """NSGA machinery + chromosome operators."""
 import random
 
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core import (
@@ -88,7 +87,7 @@ def test_crossover_mutation_validity(seed):
         # decoding never crashes and covers all layers
         placed = decode_solution(m, graphs)
         for net, plist in enumerate(placed):
-            layers = sorted(l for p in plist for l in p.subgraph.layer_ids)
+            layers = sorted(lid for p in plist for lid in p.subgraph.layer_ids)
             assert layers == list(range(graphs[net].num_layers))
 
 

@@ -8,7 +8,6 @@ from repro.core import (
     ProfileDB,
     Profiler,
     decode_solution,
-    fragmentation_penalty,
     mobile_processors,
     tpu_lanes,
     whole_model_placement,
@@ -17,7 +16,6 @@ from repro.core import (
 )
 from repro.zoo import (
     MODEL_NAMES,
-    TABLE4_RATIO,
     all_cost_graphs,
     executable_zoo,
     make_cost_graph,
@@ -154,7 +152,8 @@ def test_executable_zoo_branching_subgraph():
     """add_merge layers with external skip inputs execute correctly."""
     zoo = executable_zoo(names=["hand_det"], channels=4, spatial=8)
     m = zoo["hand_det"]
-    skips = [l.index for l in m.graph.layers if l.op_type == "add_merge"]
+    skips = [layer.index for layer in m.graph.layers
+             if layer.op_type == "add_merge"]
     assert skips, "hand_det should have merge layers"
     # subgraph starting at a merge layer -> two external inputs
     fn, args = m.build_subgraph_fn([skips[0]], "fp32")

@@ -9,7 +9,6 @@ requests survive, events are recorded, placements move off dead
 processors, worker threads stay alive.
 """
 import math
-import queue
 import random
 import threading
 

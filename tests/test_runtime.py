@@ -351,7 +351,7 @@ def test_tensor_pool_disabled_always_allocates():
     pool = TensorPool(enabled=False)
     a = pool.acquire((16,), np.float32)
     pool.release(a)
-    b = pool.acquire((16,), np.float32)
+    pool.acquire((16,), np.float32)
     assert pool.stats.mallocs == 2
     assert pool.stats.reuses == 0
 

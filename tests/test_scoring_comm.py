@@ -7,7 +7,6 @@ from _hypothesis_compat import given, settings, st
 from repro.core import (
     PAPER_COMM_MODEL,
     PiecewiseLinearCommModel,
-    group_scores,
     microbenchmark_host,
     percentile,
     qoe_score,

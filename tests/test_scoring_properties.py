@@ -63,7 +63,9 @@ def _random_curve(rng: random.Random):
 def test_bisect_equals_grid_on_random_curves(seed):
     rng = random.Random(seed)
     scores = dict(zip(ALPHA_GRID, _random_curve(rng)))
-    evaluate = lambda a: scores[a]
+    def evaluate(a):
+        return scores[a]
+
     grid = saturation_multiplier(evaluate)
     bisect = saturation_multiplier_bisect(evaluate)
     assert bisect.alpha_star == grid.alpha_star, (

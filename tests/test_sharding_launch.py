@@ -1,6 +1,5 @@
 """Sharding rules, input specs, and the HLO static analyzer."""
 import jax
-import jax.numpy as jnp
 import pytest
 from jax.sharding import Mesh, PartitionSpec as P
 
@@ -60,7 +59,8 @@ def test_input_specs_shapes():
     assert de["token"].shape == (128, 1)
     # decode carries a cache pytree sized to seq_len
     leaves = jax.tree.leaves(de["caches"])
-    assert any(l.shape[2] == 32768 for l in leaves if len(l.shape) == 5)
+    assert any(leaf.shape[2] == 32768 for leaf in leaves
+               if len(leaf.shape) == 5)
 
 
 def test_long_context_gets_sliding_window():
@@ -73,8 +73,9 @@ def test_long_context_gets_sliding_window():
     assert config_for_shape(ssm, INPUT_SHAPES["long_500k"]).sliding_window is None
     # windowed decode cache is a ring buffer of window size
     specs = input_specs(adj, INPUT_SHAPES["long_500k"])
-    kv = [l for l in jax.tree.leaves(specs["caches"]) if len(l.shape) == 5]
-    assert all(l.shape[2] == 8192 for l in kv)
+    kv = [leaf for leaf in jax.tree.leaves(specs["caches"])
+          if len(leaf.shape) == 5]
+    assert all(leaf.shape[2] == 8192 for leaf in kv)
 
 
 # -- HLO analyzer on a hand-written module ----------------------------------

@@ -125,9 +125,9 @@ def test_training_reduces_loss():
 def test_training_checkpoint_resume(tmp_path):
     cfg = get_smoke_config("mamba2-1.3b")
     path = str(tmp_path / "ck.msgpack")
-    r1 = train(cfg, TrainConfig(steps=20, batch_size=4, seq_len=32, lr=1e-3,
-                                log_every=0, checkpoint_path=path,
-                                checkpoint_every=20))
+    train(cfg, TrainConfig(steps=20, batch_size=4, seq_len=32, lr=1e-3,
+                           log_every=0, checkpoint_path=path,
+                           checkpoint_every=20))
     assert os.path.exists(path)
     r2 = train(cfg, TrainConfig(steps=30, batch_size=4, seq_len=32, lr=1e-3,
                                 log_every=0, checkpoint_path=path,
